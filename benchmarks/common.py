@@ -1,0 +1,41 @@
+"""Shared benchmark plumbing: result rows, band checks, CSV."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+__all__ = ["Row", "check_band", "format_table", "to_csv"]
+
+
+@dataclass
+class Row:
+    bench: str
+    name: str
+    value: float
+    unit: str
+    source: str = "model:KNL"       # measured | model:KNL | model:v5e
+    note: str = ""
+    check: str = ""                 # PASS / WARN / (empty = informational)
+
+
+def check_band(value: float, lo: float, hi: float, *, slack: float = 0.0) -> str:
+    """PASS inside [lo, hi] (± slack x width), WARN outside."""
+    w = (hi - lo) * slack
+    return "PASS" if (lo - w) <= value <= (hi + w) else "WARN"
+
+
+def format_table(rows: list[Row]) -> str:
+    out = [f"{'benchmark':24s} {'metric':42s} {'value':>12s} {'unit':10s} {'src':10s} {'check':5s}"]
+    for r in rows:
+        out.append(
+            f"{r.bench:24s} {r.name:42s} {r.value:12.4g} {r.unit:10s} {r.source:10s} {r.check:5s}"
+            + (f"  # {r.note}" if r.note else "")
+        )
+    return "\n".join(out)
+
+
+def to_csv(rows: list[Row]) -> str:
+    lines = ["bench,name,value,unit,source,check,note"]
+    for r in rows:
+        note = r.note.replace(",", ";")
+        lines.append(f"{r.bench},{r.name},{r.value},{r.unit},{r.source},{r.check},{note}")
+    return "\n".join(lines)

@@ -1,0 +1,64 @@
+"""Fig 2 — scalability of typical DL ops on the manycore CPU.
+
+Paper: GEMM [64,512]x[512,512] (MKL) saturates at ~8 cores; a 32k-element
+elementwise multiply at ~16.  We reproduce the knees from the calibrated
+KNL cost model and report the speedup-at-saturation, plus the same ops on
+the TPU-v5e worker model (the transfer the rest of the system relies on).
+
+[measured] rows: wall-clock of the actual jnp ops on this container's CPU
+for the same shapes — single-core, so only the per-op *cost ratio* (GEMM vs
+elementwise) is checkable, not the knee.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import KNL7250, TPUV5E, OpNode, op_saturation_point, op_time
+from .common import Row, check_band
+
+GEMM = OpNode("gemm", kind="gemm", flops=2 * 64 * 512 * 512,
+              bytes_in=(64 * 512 + 512 * 512) * 4, bytes_out=64 * 512 * 4,
+              meta={"rows": 64})
+ELTWISE = OpNode("eltwise", kind="elementwise", flops=32768,
+                 bytes_in=2 * 32768 * 4, bytes_out=32768 * 4)
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for hw, tag in ((KNL7250, "knl"), (TPUV5E, "v5e")):
+        for op, paper_knee in ((GEMM, 8), (ELTWISE, 16)):
+            k = op_saturation_point(hw, op)
+            speedup = op_time(hw, op, 1) / op_time(hw, op, k)
+            check = check_band(k, paper_knee / 2, paper_knee * 2) if tag == "knl" else ""
+            rows.append(Row("fig2", f"{op.name}_saturation_cores[{tag}]", k, "cores",
+                            f"model:{tag}", f"paper knee ~{paper_knee} (knl)", check))
+            rows.append(Row("fig2", f"{op.name}_speedup_at_knee[{tag}]", speedup, "x",
+                            f"model:{tag}"))
+
+    # measured single-core cost ratio of the two ops (sanity for the model)
+    import jax
+    import jax.numpy as jnp
+
+    a = jnp.asarray(np.random.rand(64, 512), jnp.float32)
+    b = jnp.asarray(np.random.rand(512, 512), jnp.float32)
+    c = jnp.asarray(np.random.rand(32768), jnp.float32)
+    gemm_fn = jax.jit(lambda a, b: a @ b)
+    ew_fn = jax.jit(lambda c: c * c)
+    gemm_fn(a, b).block_until_ready(); ew_fn(c).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(50):
+        gemm_fn(a, b).block_until_ready()
+    t_gemm = (time.perf_counter() - t0) / 50
+    t0 = time.perf_counter()
+    for _ in range(50):
+        ew_fn(c).block_until_ready()
+    t_ew = (time.perf_counter() - t0) / 50
+    measured_ratio = t_gemm / t_ew
+    model_ratio = op_time(KNL7250, GEMM, 1) / op_time(KNL7250, ELTWISE, 1)
+    rows.append(Row("fig2", "gemm/eltwise_cost_ratio_measured_cpu", measured_ratio, "x", "measured"))
+    rows.append(Row("fig2", "gemm/eltwise_cost_ratio_model_1core", model_ratio, "x", "model:KNL",
+                    "order-of-magnitude agreement expected",
+                    check_band(measured_ratio / model_ratio, 0.1, 10.0)))
+    return rows

@@ -1,0 +1,50 @@
+"""Fig 3 — pinned vs OS-managed threads (interference).
+
+Paper: multiple concurrent GEMM/elementwise executors achieve up to ~45%
+higher FLOPS with threads pinned to cores vs OS-scheduled (migration +
+co-location on one physical core), and >6x vs one op on all cores.
+
+We replay the same experiment in the simulator: 8 concurrent executors x 8
+cores each, op durations multiplied by the calibrated interference factor
+for the OS-managed case (``interference_multiplier(pinned=False)``) — the
+factor itself is the paper's measurement, the benchmark verifies the
+engine-level consequence.
+"""
+from __future__ import annotations
+
+from repro.core import KNL7250, Graph, OpNode, SimConfig, interference_multiplier, op_time, simulate
+from .common import Row, check_band
+
+
+def _independent_gemms(n: int) -> Graph:
+    g = Graph(f"par_gemms_{n}")
+    for i in range(n):
+        g.add(OpNode(f"gemm{i}", kind="gemm", flops=2 * 64 * 512 * 512,
+                     bytes_in=(64 * 512 + 512 * 512) * 4, bytes_out=64 * 512 * 4,
+                     meta={"rows": 64}))
+    return g
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    g = _independent_gemms(8)
+    base = SimConfig(n_executors=8, team_size=8)
+    pinned = simulate(g, KNL7250, base)
+    os_managed = simulate(
+        g, KNL7250,
+        SimConfig(n_executors=8, team_size=8,
+                  duration_multiplier=interference_multiplier(
+                      KNL7250, software_threads=64, pinned=False)),
+    )
+    gain = os_managed.makespan / pinned.makespan
+    rows.append(Row("fig3", "pinned_vs_os_flops_gain", gain, "x", "model:KNL",
+                    "paper: up to ~1.45x", check_band(gain, 1.2, 1.7)))
+
+    # >6x claim: 8 pinned executors of 8 cores vs ONE op on all 64 cores
+    one = g.nodes[0]
+    t_all_cores = op_time(KNL7250, one, 64)
+    throughput_gain = (8 * t_all_cores) / pinned.makespan / (t_all_cores / t_all_cores)
+    concurrent_vs_single = 8 * op_time(KNL7250, one, 64) / pinned.makespan
+    rows.append(Row("fig3", "concurrent8x8_vs_single_op_64c", concurrent_vs_single, "x",
+                    "model:KNL", "paper: >6x", check_band(concurrent_vs_single, 6.0, 10.0)))
+    return rows

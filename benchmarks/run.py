@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure + the beyond-paper
+TPU translation.  ``python -m benchmarks.run [--only fig5] [--csv out.csv]``.
+
+Every row carries its provenance ([measured] on this CPU vs [model:KNL] /
+[model:v5e] cost-model replay — see DESIGN.md §4) and, where the paper
+publishes a number, a PASS/WARN band check.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+from .common import Row, format_table, to_csv
+
+MODULES = [
+    "fig2_op_scalability",
+    "fig3_interference",
+    "fig5_overall",
+    "fig6_executor_sweep",
+    "table2_scheduler",
+    "section6_affinity",
+    "tpu_slot_stacking",
+]
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--only", default=None, help="substring filter on module names")
+    p.add_argument("--csv", default="results/benchmarks.csv")
+    args = p.parse_args()
+
+    rows: list[Row] = []
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        rows.extend(mod.run())
+        print(f"[{name}] done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    print(format_table(rows))
+    n_warn = sum(1 for r in rows if r.check == "WARN")
+    n_pass = sum(1 for r in rows if r.check == "PASS")
+    print(f"\n{n_pass} PASS / {n_warn} WARN / {len(rows) - n_pass - n_warn} info")
+
+    if args.csv:
+        import os
+
+        os.makedirs(os.path.dirname(args.csv) or ".", exist_ok=True)
+        with open(args.csv, "w") as f:
+            f.write(to_csv(rows))
+        print(f"wrote {args.csv}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,56 @@
+"""Table 2 — Graphi CPF scheduler vs the naive shared-queue scheduler.
+
+Interference-free comparison (the paper isolates the scheduler): same
+graphs, same executor settings, only the policy and its dispatch-path costs
+differ.  Naive = every idle executor polls one global queue (serialized
+dequeue whose cost grows with the number of concurrent pollers); CPF =
+centralized level-ordered push into per-executor buffers.
+
+Paper: Graphi/naive relative time 0.81-0.96 on medium nets across five
+parallelism settings (8-19% speedup), larger for LSTM-family (more small
+ops -> more queue contention), smaller for GoogleNet (big ops).
+"""
+from __future__ import annotations
+
+from repro.core import KNL7250, SimConfig, simulate
+from repro.models.paper_nets import PAPER_NETS, paper_graph
+from .common import Row, check_band
+
+SETTINGS = [(2, 32), (4, 16), (8, 8), (16, 4), (32, 2)]
+
+
+JITTER = 0.15   # declared calibration: ±15% per-op runtime variation — the
+#                 paper's own premise ("unpredictable variations at run
+#                 time", §4.3) and what CPF priority protects against
+SEEDS = tuple(range(6))
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    best_gain = {}
+    for net in PAPER_NETS:
+        g = paper_graph(net, "medium")
+        ratios = []
+        for n, k in SETTINGS:
+            rs = []
+            for seed in SEEDS:
+                cpf = simulate(g, KNL7250, SimConfig(n_executors=n, team_size=k,
+                                                     policy="cpf", jitter=JITTER), seed=seed)
+                naive = simulate(g, KNL7250, SimConfig(n_executors=n, team_size=k,
+                                                       policy="random", jitter=JITTER), seed=seed)
+                rs.append(cpf.makespan / naive.makespan)
+            ratio = sum(rs) / len(rs)
+            ratios.append(ratio)
+            rows.append(Row("table2", f"{net}_medium_{n}x{k}_cpf_over_naive",
+                            ratio, "ratio", "model:KNL"))
+        best_gain[net] = 1.0 - min(ratios)
+    for net, gain in best_gain.items():
+        band = (0.04, 0.25) if net != "googlenet" else (0.0, 0.15)
+        rows.append(Row("table2", f"{net}_best_scheduler_gain", gain * 100, "%",
+                        "model:KNL", "paper: 8-19% (LSTM-ish high, GoogleNet low)",
+                        check_band(gain, *band)))
+    # ordering claim: LSTM-family gains exceed GoogleNet's
+    ok = min(best_gain["lstm"], best_gain["phased_lstm"]) >= best_gain["googlenet"]
+    rows.append(Row("table2", "lstm_gain_exceeds_googlenet", float(ok), "bool",
+                    "model:KNL", "", "PASS" if ok else "WARN"))
+    return rows

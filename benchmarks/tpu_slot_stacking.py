@@ -1,0 +1,82 @@
+"""Beyond-paper — the Graphi translation to a TPU pod (DESIGN.md §2.1).
+
+Three claims, all on the v5e hardware model / real JAX artifacts:
+
+1. **CPF recovers the cuDNN diagonal** (paper §7.4): critical-path-first
+   scheduling of an L x T recurrence DAG visits cells in non-decreasing
+   anti-diagonal order — checked structurally, not by timing.
+2. **Slot stacking wins on the pod model**: scheduling the recurrence on
+   N executor groups (simulated with v5e worker costs) beats 1-group
+   sequential by ~the wavefront width, exactly the paper's Fig-6 shape.
+3. **The stacked wavefront LSTM is numerically exact**: the jitted
+   stacked-diagonal plan equals the sequential lax.scan reference (the
+   static-plan compiler's correctness contract).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    TPUV5E,
+    GraphiEngine,
+    SimConfig,
+    is_wavefront_order,
+    recurrence_graph,
+    sequential_lstm,
+    sequential_makespan,
+    simulate,
+    stacked_wavefront_lstm,
+)
+from .common import Row, check_band
+
+L, T, B, H = 8, 24, 32, 256
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    # per-cell cost: 2 GEMMs [B,H]x[H,4H] + gates, on one v5e chip
+    flops = 2 * 2 * B * H * 4 * H
+    byts = (2 * B * H + 2 * H * 4 * H) * 2
+    g = recurrence_graph(L, T, flops_per_cell=flops, bytes_per_cell=byts)
+
+    eng = GraphiEngine(g, TPUV5E, n_workers=64, reserved_workers=0)
+    prof = eng.profile()
+    sched = simulate(g, TPUV5E, SimConfig(n_executors=prof.best_n_executors,
+                                          team_size=prof.best_team_size))
+    order = sched.start_order()
+    diag_ok = is_wavefront_order(order, g)
+    rows.append(Row("tpu_stack", "cpf_recovers_diagonal", float(diag_ok), "bool",
+                    "model:v5e", "paper §7.4 cuDNN pattern", "PASS" if diag_ok else "WARN"))
+    used = len({e.executor for e in sched.trace})
+    rows.append(Row("tpu_stack", "executor_groups_active", used, "groups",
+                    "model:v5e", f"schedule keeps >= wavefront width ({L}) busy",
+                    check_band(used, L, 64)))
+
+    seq = sequential_makespan(TPUV5E, g, 64)
+    speed = seq / sched.makespan
+    # two stacked terms: width parallelism (~L) x per-op dispatch-alpha
+    # amortization (sequential pays alpha per cell; the diagonal plan per
+    # slot) — on a dispatch-bound recurrence the product far exceeds L
+    rows.append(Row("tpu_stack", "stacked_vs_sequential_makespan", speed, "x",
+                    "model:v5e", "width x dispatch-batching; >L expected",
+                    check_band(speed, 1.5, (L + T) * 2)))
+
+    # numerical exactness of the static plan
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 4)
+    stacked = {
+        "Wx": jax.random.normal(ks[0], (L, H, 4 * H), jnp.float32) * 0.05,
+        "Wh": jax.random.normal(ks[1], (L, H, 4 * H), jnp.float32) * 0.05,
+        "b": jax.random.normal(ks[2], (L, 4 * H), jnp.float32) * 0.05,
+    }
+    xs = jax.random.normal(ks[3], (T, B, H), jnp.float32)
+    per_layer = [jax.tree.map(lambda p, i=i: p[i], stacked) for i in range(L)]
+    ref = sequential_lstm(per_layer, xs)
+    out = jax.jit(stacked_wavefront_lstm, static_argnums=2)(stacked, xs, L)
+    err = float(jnp.abs(out - ref).max())
+    rows.append(Row("tpu_stack", "stacked_wavefront_max_err", err, "abs",
+                    "measured", "vs sequential lax.scan reference",
+                    "PASS" if err < 1e-4 else "WARN"))
+    return rows

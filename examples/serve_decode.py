@@ -1,0 +1,44 @@
+"""Batched serving demo: wave-batching engine over a reduced gemma config.
+
+Submits a mixed bag of requests (different prompt lengths and budgets),
+serves them in waves, and reports per-wave batching plus decode throughput.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import transformer
+from repro.serve.engine import Request, ServeConfig, ServeEngine
+
+
+def main() -> None:
+    cfg = get_config("gemma-2b", smoke=True)
+    params = transformer.init_params(cfg, jax.random.key(7))
+    engine = ServeEngine(cfg, params, ServeConfig(max_batch=4, max_len=128,
+                                                  temperature=0.8))
+    rng = np.random.default_rng(1)
+    for i in range(10):
+        plen = int(rng.integers(8, 48))
+        engine.submit(Request(
+            request_id=i,
+            prompt=rng.integers(1, cfg.vocab_size, size=plen).astype(np.int32),
+            max_new_tokens=int(rng.integers(8, 32)),
+            eos_id=None,
+        ))
+    t0 = time.perf_counter()
+    done = engine.run()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.output) for r in done)
+    print(f"{len(done)} requests -> {total} tokens in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s incl. compile)")
+    for r in done:
+        print(f"  req {r.request_id:2d}: prompt {len(r.prompt):3d} tok, "
+              f"generated {len(r.output):3d}, head={r.output[:6]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""End-to-end driver: train a ~100M-parameter LM on the synthetic bigram
+stream with the full production stack — sharded train step, microbatching,
+checkpointing, fault-tolerant trainer, straggler watchdog.
+
+Default run (~100M params, 200 steps) takes tens of minutes on this CPU;
+``--tiny`` drops to a ~4M model for a 2-minute demonstration.  The loss
+must descend from ~ln(V) toward the bigram entropy floor — that descent is
+the acceptance check printed at the end.
+
+    PYTHONPATH=src python examples/train_lm.py --tiny
+    PYTHONPATH=src python examples/train_lm.py --steps 200    # ~100M params
+"""
+import argparse
+import math
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data import DataConfig, SyntheticTokens
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import TrainStepConfig, init_train_state, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def model_100m() -> ModelConfig:
+    return ModelConfig(
+        name="lm-100m", family="dense", n_layers=10, d_model=640,
+        n_heads=10, n_kv_heads=5, d_ff=2560, vocab_size=32_000,
+        act="silu", scan_layers=True,
+    )
+
+
+def model_tiny() -> ModelConfig:
+    return ModelConfig(
+        name="lm-tiny", family="dense", n_layers=4, d_model=128,
+        n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=2_048,
+        act="silu", scan_layers=True,
+    )
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--tiny", action="store_true")
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--ckpt-dir", default="/tmp/train_lm_ckpt")
+    args = p.parse_args()
+
+    cfg = model_tiny() if args.tiny else model_100m()
+    n_params = cfg.n_params()
+    print(f"model: {cfg.name}, {n_params/1e6:.1f}M params")
+
+    tcfg = TrainStepConfig(
+        microbatches=2, remat=True,
+        adamw=AdamWConfig(lr=1e-3),
+        warmup_steps=max(1, args.steps // 10), total_steps=args.steps,
+    )
+    state = init_train_state(cfg, jax.random.key(0), tcfg.adamw)
+    step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+
+    data = SyntheticTokens(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
+        kind="bigram", bigram_noise=0.15,
+    ))
+    trainer = Trainer(
+        step, state, data.batch,
+        TrainerConfig(total_steps=args.steps,
+                      checkpoint_every=max(20, args.steps // 4),
+                      log_every=max(5, args.steps // 20)),
+        checkpoint=CheckpointManager(args.ckpt_dir, keep=2),
+    )
+    report = trainer.run()
+
+    first = next(r["loss"] for r in report.history if "loss" in r)
+    last = report.final_loss
+    # bigram with noise eps over vocab V: H = (1-eps)ln(1/(1-eps)) ~ floor
+    print("\nstep      loss    ms/step")
+    for r in report.history:
+        if "loss" in r:
+            print(f"{r['step']:5d}  {r['loss']:8.4f}  {r['time_s']*1e3:8.0f}")
+    print(f"\nuniform baseline ln(V) = {math.log(cfg.vocab_size):.3f}")
+    print(f"loss {first:.3f} -> {last:.3f}  "
+          f"({'DESCENDED OK' if last < first - 0.5 else 'NO DESCENT — check setup'})")
+    print(f"restarts={report.restarts} stragglers={len(report.stragglers)}")
+
+
+if __name__ == "__main__":
+    main()

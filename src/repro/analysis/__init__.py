@@ -1,0 +1,11 @@
+from .hlo_collectives import collective_bytes, collective_summary
+from .roofline import TPU_V5E, HardwareSpec, RooflineReport, roofline_report
+
+__all__ = [
+    "collective_bytes",
+    "collective_summary",
+    "HardwareSpec",
+    "TPU_V5E",
+    "RooflineReport",
+    "roofline_report",
+]

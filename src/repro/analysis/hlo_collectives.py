@@ -1,0 +1,49 @@
+"""Collective traffic summary from optimized HLO text.
+
+Thin facade over :mod:`repro.analysis.hlo_cost` (the trip-count-aware
+walker): collectives inside a scanned layer stack execute once *per layer*,
+so naive line-grep undercounts by the trip count exactly like flops.
+
+Convention: bytes are the **operand** (pre-collective, per-device) sizes —
+the payload each device contributes.  Ring-transfer inflation factors
+(2(k-1)/k for all-reduce etc.) are applied by the roofline, not here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .hlo_cost import COLLECTIVE_KINDS, module_cost
+
+__all__ = ["collective_bytes", "collective_summary", "CollectiveStats", "COLLECTIVE_KINDS"]
+
+
+@dataclass
+class CollectiveStats:
+    # kind -> (count, operand bytes)
+    per_kind: dict[str, tuple[int, float]] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(b for _, b in self.per_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(c for c, _ in self.per_kind.values())
+
+    def table(self) -> str:
+        rows = [f"{'kind':20s} {'count':>6s} {'MiB':>10s}"]
+        for kind in COLLECTIVE_KINDS:
+            if kind in self.per_kind:
+                c, b = self.per_kind[kind]
+                rows.append(f"{kind:20s} {c:6d} {b / 2**20:10.2f}")
+        rows.append(f"{'TOTAL':20s} {self.total_count:6d} {self.total_bytes / 2**20:10.2f}")
+        return "\n".join(rows)
+
+
+def collective_summary(hlo_text: str) -> CollectiveStats:
+    mc = module_cost(hlo_text)
+    return CollectiveStats(per_kind=dict(mc.collectives))
+
+
+def collective_bytes(hlo_text: str) -> float:
+    return collective_summary(hlo_text).total_bytes

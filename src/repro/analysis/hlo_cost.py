@@ -1,0 +1,589 @@
+"""Trip-count-aware cost walker over optimized HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+so any ``lax.scan`` (layer stacks, microbatch accumulation, KV chunking)
+under-reports flops/bytes by the trip count — for a 64-layer scanned model
+that's a 64x error in the roofline's compute term.  XLA records the trip
+count in ``backend_config={"known_trip_count":{"n":...}}``; this module
+parses the module text and walks the computation graph multiplying through.
+
+Accounting conventions (per-device — the post-SPMD module is the per-device
+program):
+
+* flops: ``dot`` = 2 x |result| x K (contracting extent); elementwise /
+  reduce = |result| / |operand|; data movement (reshape, slice, gte, ...) = 0.
+* bytes: per *top-level* instruction = operand bytes + result bytes (fusions
+  count at the call site only — their internals stay in registers/VMEM),
+  i.e. an HBM-traffic model, matching what the memory roofline term wants.
+* collectives: operand bytes per kind, scaled by enclosing trip counts.
+
+Validated against known-flop probes in tests/test_analysis.py (a scanned
+matmul reports exactly trip x 2MNK).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["ModuleCost", "module_cost", "parse_computations"]
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+# note: tuple shapes may contain `/*index=5*/` comments — anything but parens
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\("
+)
+_REF_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+
+# opcodes that move/reinterpret data: zero flops, zero HBM-traffic charge
+# (their traffic is captured by the producing/consuming compute ops)
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "reshape", "after-all", "add-dependency", "iota",
+    "partition-id", "replica-id", "rng-bit-generator", "rng",
+    "get-dimension-size", "opt-barrier", "domain",
+}
+# charged for bytes but not flops
+_MOVE_OPS = {
+    "copy", "transpose", "slice", "dynamic-slice", "dynamic-update-slice",
+    "concatenate", "broadcast", "pad", "reverse", "gather", "scatter",
+    "select-and-scatter", "convert", "copy-start", "copy-done", "sort",
+}
+
+
+def _shape_dims(shape_text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(shape_text: str) -> int:
+    total = 0
+    for _, dims in _shape_dims(shape_text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    shape_text: str
+    opcode: str
+    operands: list[str]
+    line: str
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    root: str = ""
+
+
+def parse_computations(text: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    entry = ""
+    cur: Computation | None = None
+    for line in text.splitlines():
+        hm = _COMP_HEADER_RE.match(line)
+        if hm:
+            cur = Computation(hm.group(2))
+            comps[cur.name] = cur
+            if hm.group(1):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        name, shape_text, opcode = im.groups()
+        # operands: balanced-paren span right after the opcode's '('
+        start = im.end() - 1
+        depth, end = 0, start
+        for i in range(start, len(line)):
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _REF_RE.findall(line[start : end + 1])
+        is_root = bool(re.match(r"^\s*ROOT\s", line))
+        cur.instrs.append(Instr(name, shape_text, opcode, operands, line, is_root))
+        if is_root:
+            cur.root = name
+    return comps, entry
+
+
+@dataclass
+class ModuleCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: dict[str, tuple[int, float]] = field(default_factory=dict)
+    unknown_trip_whiles: int = 0
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(b for _, b in self.collectives.values())
+
+    def add(self, other: "ModuleCost", scale: float = 1.0, *, bytes_too: bool = True) -> None:
+        self.flops += other.flops * scale
+        self.transcendentals += other.transcendentals * scale
+        if bytes_too:
+            self.bytes += other.bytes * scale
+        for k, (c, b) in other.collectives.items():
+            c0, b0 = self.collectives.get(k, (0, 0.0))
+            self.collectives[k] = (c0 + int(c * scale), b0 + b * scale)
+        self.unknown_trip_whiles += other.unknown_trip_whiles
+
+
+_TRANSCENDENTAL = {"exponential", "exp", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "logistic", "sine", "cosine", "expm1", "log1p", "erf", "atan2",
+                   "cbrt", "exponential-minus-one"}
+
+# ops that touch only a window of their first operand: charge the accessed
+# region (~ result size), not the whole buffer — a dynamic-slice of a stacked
+# [L, ...] parameter inside a scan body reads one layer, not L
+_WINDOW_READ_OPS = {"slice", "dynamic-slice", "gather"}
+# in-place window writes: traffic = the update operand (read+write region),
+# NOT the full aliased buffer the result shape names
+_WINDOW_WRITE_OPS = {"dynamic-update-slice", "scatter"}
+
+# bf16-native correction (XLA:CPU promotes every bf16 dot to f32, inserting
+# convert chains that would not exist on TPU): values whose producer chain is
+# pure data movement from a bf16 source are charged at 2 B/elt even when the
+# CPU module types them f32.  Chain-transparent opcodes:
+_CHAIN_OPS = {"convert", "copy", "bitcast", "bitcast-convert", "reshape",
+              "transpose", "all-gather", "broadcast", "get-tuple-element"}
+
+
+class _Bf16Resolver:
+    """Tracks which values are f32-typed-but-bf16-born (CPU upcast chains)."""
+
+    def __init__(self) -> None:
+        self.producers: dict[str, Instr] = {}
+        self.comp_of: dict[str, str] = {}
+        self.comps: dict[str, Computation] = {}
+        self._memo: dict[str, bool] = {}
+
+    def build(self, comps: dict[str, Computation]) -> None:
+        self.comps = comps
+        for cname, comp in comps.items():
+            for ins in comp.instrs:
+                self.producers[ins.name] = ins
+                self.comp_of[ins.name] = cname
+
+    def born_bf16(self, name: str, depth: int = 0) -> bool:
+        if depth > 12:
+            return False
+        if name in self._memo:
+            return self._memo[name]
+        ins = self.producers.get(name)
+        if ins is None:
+            return False
+        out = False
+        if ins.shape_text.startswith("bf16"):
+            out = True
+        elif ins.opcode in _CHAIN_OPS and ins.operands:
+            out = self.born_bf16(ins.operands[0], depth + 1)
+        elif ins.opcode == "fusion":
+            cm = _CALLS_RE.search(ins.line)
+            comp = self.comps.get(cm.group(1)) if cm else None
+            if comp is not None and all(
+                i.opcode in _CHAIN_OPS or i.opcode == "parameter" for i in comp.instrs
+            ):
+                out = any(self.born_bf16(o, depth + 1) for o in ins.operands)
+        self._memo[name] = out
+        return out
+
+    def eff_bytes(self, name: str, sizes: dict[str, str]) -> float:
+        """Effective (TPU-native) bytes of a value."""
+        shape = sizes.get(name, "")
+        raw = _shape_bytes(shape)
+        if shape.startswith("f32") and self.born_bf16(name):
+            return raw / 2.0
+        return float(raw)
+
+
+def _is_pure_convert(ins: Instr, comps: dict[str, Computation]) -> bool:
+    """bf16<->f32 convert chains are XLA:CPU dot-promotion artifacts — on the
+    TPU target they are fused away or absent; charge them zero traffic."""
+    if ins.opcode == "convert":
+        return True
+    if ins.opcode == "fusion":
+        cm = _CALLS_RE.search(ins.line)
+        comp = comps.get(cm.group(1)) if cm else None
+        if comp is not None and comp.instrs and all(
+            i.opcode in ("parameter", "convert", "bitcast", "copy", "reshape", "transpose")
+            for i in comp.instrs
+        ) and any(i.opcode == "convert" for i in comp.instrs):
+            return True
+    return False
+
+
+def _instr_bytes(ins: Instr, sizes: dict[str, str], rs: "_Bf16Resolver | None" = None) -> float:
+    """HBM traffic estimate for one top-level instruction."""
+    if ins.opcode in _WINDOW_READ_OPS:
+        return 2.0 * _shape_bytes(ins.shape_text)
+    if ins.opcode in _WINDOW_WRITE_OPS:
+        upd = sizes.get(ins.operands[1], "") if len(ins.operands) > 1 else ""
+        return 2.0 * _shape_bytes(upd)
+    total = float(_shape_bytes(ins.shape_text))
+    if rs is not None and ins.shape_text.startswith("f32") and rs.born_bf16(ins.name):
+        total /= 2.0
+    for o in ins.operands:
+        total += rs.eff_bytes(o, sizes) if rs is not None else _shape_bytes(sizes.get(o, ""))
+    return total
+
+
+def _fusion_io_bytes(
+    ins: Instr,
+    comps: dict[str, Computation],
+    called: str,
+    sizes: dict[str, str],
+    rs: "_Bf16Resolver | None" = None,
+) -> float:
+    """Traffic of a fusion call site: each parameter is charged by how the
+    fusion body *accesses* it (windowed reads charge the window), the output
+    by what the root *writes* (a DUS root writes the update, aliasing the
+    buffer)."""
+    comp = comps.get(called)
+    if comp is None:
+        return _instr_bytes(ins, sizes, rs)
+    # map parameter index -> instruction name
+    params: dict[int, str] = {}
+    consumers: dict[str, list[Instr]] = {}
+    root_ins: Instr | None = None
+    for inner in comp.instrs:
+        if inner.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", inner.line)
+            if m:
+                params[int(m.group(1))] = inner.name
+        for o in inner.operands:
+            consumers.setdefault(o, []).append(inner)
+        if inner.is_root:
+            root_ins = inner
+    def _windowed_reads(pname: str) -> list[Instr] | None:
+        """Window-read instrs this parameter reaches through pure chain ops
+        (bitcast/reshape/...); None if any path escapes to real compute —
+        without chain-following a `bitcast -> dynamic-slice` of a stacked
+        [L, ...] weight charges the WHOLE stack per scan iteration."""
+        found: list[Instr] = []
+        stack, seen = [pname], set()
+        while stack:
+            nm = stack.pop()
+            for cons_i in consumers.get(nm, []):
+                if cons_i.opcode in _WINDOW_READ_OPS:
+                    found.append(cons_i)
+                elif cons_i.opcode in ("bitcast", "reshape", "copy", "transpose", "convert"):
+                    if cons_i.name not in seen:
+                        seen.add(cons_i.name)
+                        stack.append(cons_i.name)
+                else:
+                    return None
+        return found or None
+
+    total = 0.0
+    for idx, op_name in enumerate(ins.operands):
+        full = rs.eff_bytes(op_name, sizes) if rs is not None else _shape_bytes(sizes.get(op_name, ""))
+        pname = params.get(idx)
+        wins = _windowed_reads(pname) if pname else None
+        if wins is not None:
+            total += sum(_shape_bytes(c.shape_text) for c in wins)
+        else:
+            total += full
+    if root_ins is not None and root_ins.opcode in _WINDOW_WRITE_OPS:
+        upd = root_ins.operands[1] if len(root_ins.operands) > 1 else ""
+        inner_sizes = {i.name: i.shape_text for i in comp.instrs}
+        total += _shape_bytes(inner_sizes.get(upd, ""))
+    else:
+        out_b = float(_shape_bytes(ins.shape_text))
+        if rs is not None and ins.shape_text.startswith("f32") and rs.born_bf16(ins.name):
+            out_b /= 2.0
+        total += out_b
+    return total
+
+
+def _dot_flops(instr: Instr, sizes: dict[str, str]) -> float:
+    k = 1
+    m = _CONTRACT_RE.search(instr.line)
+    if m and instr.operands:
+        lhs_shape = sizes.get(instr.operands[0], "")
+        dims_list = _shape_dims(lhs_shape)
+        if dims_list:
+            dims = dims_list[0][1]
+            idxs = [int(i) for i in m.group(1).split(",") if i != ""]
+            for i in idxs:
+                if i < len(dims):
+                    k *= dims[i]
+    return 2.0 * _shape_elems(instr.shape_text) * k
+
+
+def _conv_flops(instr: Instr, sizes: dict[str, str]) -> float:
+    # flops = 2 * |result| * (kernel elems / Cout); Cout from dim_labels 'o'
+    if len(instr.operands) < 2:
+        return 2.0 * _shape_elems(instr.shape_text)
+    kshape = _shape_dims(sizes.get(instr.operands[1], ""))
+    if not kshape:
+        return 2.0 * _shape_elems(instr.shape_text)
+    kdims = kshape[0][1]
+    kelems = 1
+    for d in kdims:
+        kelems *= d
+    m = re.search(r"dim_labels=[^_]*_([\dio]+)", instr.line)
+    cout = 1
+    if m and kdims:
+        labels = m.group(1)
+        o_idx = labels.find("o")
+        if 0 <= o_idx < len(kdims):
+            cout = kdims[o_idx]
+    return 2.0 * _shape_elems(instr.shape_text) * max(1, kelems // max(cout, 1))
+
+
+def _comp_cost(
+    name: str,
+    comps: dict[str, Computation],
+    sizes: dict[str, str],
+    memo: dict[str, ModuleCost],
+    stack: set[str],
+    rs: "_Bf16Resolver | None" = None,
+) -> ModuleCost:
+    if name in memo:
+        return memo[name]
+    if name in stack or name not in comps:
+        return ModuleCost()
+    stack = stack | {name}
+    total = ModuleCost()
+    for ins in comps[name].instrs:
+        op = ins.opcode
+        if op == "while":
+            m = _COND_BODY_RE.search(ins.line)
+            tm = _TRIP_RE.search(ins.line)
+            trip = int(tm.group(1)) if tm else 1
+            if tm is None:
+                total.unknown_trip_whiles += 1
+            if m:
+                body = _comp_cost(m.group(2), comps, sizes, memo, stack, rs)
+                cond = _comp_cost(m.group(1), comps, sizes, memo, stack, rs)
+                total.add(body, trip)
+                total.add(cond, trip)
+            continue
+        if op in ("fusion", "call", "async-start", "map"):
+            if rs is not None and _is_pure_convert(ins, comps):
+                continue
+            cm = _CALLS_RE.search(ins.line) or re.search(r"to_apply=%?([\w.\-]+)", ins.line)
+            if cm:
+                inner = _comp_cost(cm.group(1), comps, sizes, memo, stack, rs)
+                total.add(inner, 1.0, bytes_too=False)  # flops only; VMEM-internal
+                total.bytes += _fusion_io_bytes(ins, comps, cm.group(1), sizes, rs)
+            else:
+                total.bytes += _instr_bytes(ins, sizes, rs)
+            continue
+        if op == "conditional":
+            branches = re.findall(r"(?:branch_computations=\{([^}]*)\}|(?:true|false)_computation=%?([\w.\-]+))", ins.line)
+            names = []
+            for grp, single in branches:
+                if grp:
+                    names += _REF_RE.findall(grp)
+                if single:
+                    names.append(single)
+            if names:
+                worst = ModuleCost()
+                for bn in names:
+                    c = _comp_cost(bn, comps, sizes, memo, stack, rs)
+                    if c.flops >= worst.flops:
+                        worst = c
+                total.add(worst, 1.0)
+            continue
+        kind = next((k for k in COLLECTIVE_KINDS if op.startswith(k)), None)
+        if kind is not None:
+            if rs is not None:
+                ob = sum(rs.eff_bytes(o, sizes) for o in ins.operands)
+            else:
+                ob = sum(_shape_bytes(sizes.get(o, "")) for o in ins.operands)
+            if ob == 0:
+                ob = _shape_bytes(ins.shape_text)
+            c0, b0 = total.collectives.get(kind, (0, 0.0))
+            total.collectives[kind] = (c0 + 1, b0 + ob)
+            total.bytes += ob + _shape_bytes(ins.shape_text)
+            continue
+        if op in _FREE_OPS:
+            continue
+        if rs is not None and op == "convert":
+            continue   # CPU dot-promotion artifact; absent on TPU
+        # bytes: access-aware operand + result traffic (HBM model)
+        total.bytes += _instr_bytes(ins, sizes, rs)
+        if op in _MOVE_OPS:
+            continue
+        if op == "dot":
+            total.flops += _dot_flops(ins, sizes)
+        elif op == "convolution":
+            total.flops += _conv_flops(ins, sizes)
+        elif op in ("reduce", "reduce-window"):
+            total.flops += sum(_shape_elems(sizes.get(o, "")) for o in ins.operands[:1])
+        else:
+            n = _shape_elems(ins.shape_text)
+            total.flops += n
+            if op in _TRANSCENDENTAL:
+                total.transcendentals += n
+    memo[name] = total
+    return total
+
+
+def module_cost(hlo_text: str, *, bf16_native: bool = True) -> ModuleCost:
+    """Per-device flops / HBM bytes / collective traffic of an optimized HLO
+    module, with while bodies multiplied by their known trip counts.
+
+    ``bf16_native``: charge f32 values born from bf16 upcast chains at
+    2 B/elt (XLA:CPU promotes every bf16 dot to f32; on the TPU target the
+    converts do not exist and the traffic is bf16 — without this the memory
+    and collective terms are inflated ~2x for bf16 models).
+    """
+    comps, entry = parse_computations(hlo_text)
+    sizes: dict[str, str] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            sizes[ins.name] = ins.shape_text
+    rs = None
+    if bf16_native:
+        rs = _Bf16Resolver()
+        rs.build(comps)
+    memo: dict[str, ModuleCost] = {}
+    if not entry:
+        entry = next(iter(comps), "")
+    return _comp_cost(entry, comps, sizes, memo, set(), rs)
+
+
+def _toplevel_multipliers(comps: dict[str, Computation], entry: str) -> dict[str, float]:
+    """Enclosing trip multiplier per *top-level* computation (fusion bodies
+    excluded — their work is charged at the call site)."""
+    mult: dict[str, float] = {entry: 1.0}
+    frontier = [entry]
+    while frontier:
+        cname = frontier.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                tm = _TRIP_RE.search(ins.line)
+                trip = int(tm.group(1)) if tm else 1
+                cb = _COND_BODY_RE.search(ins.line)
+                if cb:
+                    for sub in cb.groups():
+                        if sub not in mult:
+                            mult[sub] = m * trip
+                            frontier.append(sub)
+            elif ins.opcode == "call":
+                cm = _CALLS_RE.search(ins.line)
+                if cm and cm.group(1) not in mult:
+                    mult[cm.group(1)] = m
+                    frontier.append(cm.group(1))
+    return mult
+
+
+def top_flops(hlo_text: str, k: int = 20) -> list[tuple[float, str, str]]:
+    """The k top-FLOPS instructions (x enclosing trips) — localizes wasted
+    compute (useful-ratio hunts)."""
+    comps, entry = parse_computations(hlo_text)
+    sizes = {i.name: i.shape_text for c in comps.values() for i in c.instrs}
+    mult = _toplevel_multipliers(comps, entry)
+    memo: dict[str, ModuleCost] = {}
+    rows: list[tuple[float, str, str]] = []
+    for cname, m in mult.items():
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            f = 0.0
+            if ins.opcode == "dot":
+                f = _dot_flops(ins, sizes)
+            elif ins.opcode == "convolution":
+                f = _conv_flops(ins, sizes)
+            elif ins.opcode in ("fusion", "map"):
+                cm = _CALLS_RE.search(ins.line)
+                if cm:
+                    f = _comp_cost(cm.group(1), comps, sizes, memo, set()).flops
+            elif ins.opcode not in _FREE_OPS and ins.opcode not in _MOVE_OPS \
+                    and ins.opcode not in ("while", "call", "conditional"):
+                f = _shape_elems(ins.shape_text)
+            if f:
+                meta = re.search(r'op_name="([^"]*)"', ins.line)
+                rows.append((f * m, ins.opcode, meta.group(1) if meta else ins.name))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:k]
+
+
+def top_traffic(hlo_text: str, k: int = 20) -> list[tuple[float, str, str]]:
+    """The k top HBM-traffic instructions — (bytes x enclosing trips, opcode,
+    op_name metadata) — the profile the §Perf hillclimb reads."""
+    comps, entry = parse_computations(hlo_text)
+    sizes: dict[str, str] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            sizes[ins.name] = ins.shape_text
+
+    mult = _toplevel_multipliers(comps, entry)
+
+    rows: list[tuple[float, str, str]] = []
+    for cname, m in mult.items():
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode in _FREE_OPS or ins.opcode in ("while", "call"):
+                continue
+            if ins.opcode in ("fusion", "call", "map"):
+                cm = _CALLS_RE.search(ins.line)
+                b = _fusion_io_bytes(ins, comps, cm.group(1), sizes) if cm else _instr_bytes(ins, sizes)
+            else:
+                b = _instr_bytes(ins, sizes)
+            meta = re.search(r'op_name="([^"]*)"', ins.line)
+            rows.append((b * m, ins.opcode, meta.group(1) if meta else ins.name))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:k]

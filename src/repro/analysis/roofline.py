@@ -1,0 +1,135 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs            / (peak_FLOP/s per chip)
+    memory     = HLO_bytes            / (HBM_bw per chip)
+    collective = collective_bytes     / (ICI link_bw per chip)
+
+All numerators are **per-device** quantities from the post-SPMD module (the
+per-device program), computed by the trip-count-aware walker in hlo_cost.py
+— NOT ``compiled.cost_analysis()``, which counts scan bodies once (see that
+module's docstring; EXPERIMENTS.md §Roofline records the discrepancy).
+
+The dominant term estimates step time at perfect overlap; usefulness is
+judged by MODEL_FLOPS/HLO_FLOPS (how much compiled compute is 6ND-useful)
+and by the roofline fraction compute/max(all) (MFU bound at that schedule).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .hlo_cost import ModuleCost, module_cost
+
+__all__ = ["HardwareSpec", "TPU_V5E", "RooflineReport", "roofline_report"]
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float        # per chip, bf16
+    hbm_bw: float            # per chip, B/s
+    link_bw: float           # per ICI link, B/s
+    hbm_bytes: float         # per chip capacity
+
+    def describe(self) -> str:
+        return (
+            f"{self.name}: {self.peak_flops/1e12:.0f} TF/s bf16, "
+            f"{self.hbm_bw/1e9:.0f} GB/s HBM, {self.link_bw/1e9:.0f} GB/s/link ICI"
+        )
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    link_bw=50e9,
+    hbm_bytes=16e9,
+)
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    # per-device numerators
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collectives: dict = field(default_factory=dict)
+    # terms (seconds)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    # usefulness
+    model_flops_total: float = 0.0
+    useful_ratio: float = 0.0        # MODEL_FLOPS / (HLO_FLOPS * chips)
+    roofline_fraction: float = 0.0   # compute_s / max(terms) — MFU upper bound
+    # memory fit
+    bytes_per_device: float = 0.0    # args + temps from memory_analysis
+    fits_hbm: bool = True
+    dominant: str = "compute"
+    note: str = ""
+
+    def step_time_bound(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def mfu_bound(self, hw: "HardwareSpec | None" = None) -> float:
+        """Model-flops utilization at the roofline bound (what a perfect
+        runtime would achieve with this compiled schedule)."""
+        hw = hw or TPU_V5E
+        t = self.step_time_bound()
+        if t <= 0 or not self.n_chips:
+            return 0.0
+        return self.model_flops_total / (t * self.n_chips * hw.peak_flops)
+
+    def row(self) -> str:
+        return (
+            f"{self.arch:22s} {self.shape:12s} {self.mesh:10s} "
+            f"c={self.compute_s*1e3:9.3f}ms m={self.memory_s*1e3:9.3f}ms "
+            f"x={self.collective_s*1e3:9.3f}ms dom={self.dominant:10s} "
+            f"useful={self.useful_ratio:6.3f} frac={self.roofline_fraction:5.3f}"
+        )
+
+
+def roofline_report(
+    *,
+    arch: str,
+    shape: str,
+    mesh_desc: str,
+    n_chips: int,
+    hlo_text: str,
+    model_flops_total: float,
+    bytes_per_device: float = 0.0,
+    hw: HardwareSpec = TPU_V5E,
+    cost: ModuleCost | None = None,
+) -> RooflineReport:
+    mc = cost if cost is not None else module_cost(hlo_text)
+    compute_s = mc.flops / hw.peak_flops
+    memory_s = mc.bytes / hw.hbm_bw
+    collective_s = mc.collective_bytes / hw.link_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)  # type: ignore[arg-type]
+    hlo_total = mc.flops * n_chips
+    rep = RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_desc,
+        n_chips=n_chips,
+        hlo_flops=mc.flops,
+        hlo_bytes=mc.bytes,
+        collective_bytes=mc.collective_bytes,
+        collectives={k: v for k, v in mc.collectives.items()},
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        model_flops_total=model_flops_total,
+        useful_ratio=model_flops_total / hlo_total if hlo_total else 0.0,
+        roofline_fraction=compute_s / max(max(terms.values()), 1e-30),
+        bytes_per_device=bytes_per_device,
+        fits_hbm=bytes_per_device <= hw.hbm_bytes if bytes_per_device else True,
+        dominant=dominant,
+    )
+    if mc.unknown_trip_whiles:
+        rep.note = f"{mc.unknown_trip_whiles} while loop(s) without known_trip_count"
+    return rep

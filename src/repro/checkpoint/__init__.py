@@ -1,0 +1,15 @@
+from .store import (
+    CheckpointManager,
+    latest_step,
+    load_checkpoint,
+    restore_state,
+    save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "latest_step",
+    "load_checkpoint",
+    "restore_state",
+    "save_checkpoint",
+]

@@ -1,0 +1,190 @@
+"""Atomic, keep-N, mesh-agnostic checkpoints.
+
+Layout: ``<dir>/step_<k>/state.npz`` (flattened pytree, '/'-joined keys)
+plus ``meta.json``; a checkpoint directory is **atomically** published via
+``os.rename`` of a ``.tmp`` staging dir — a crash mid-save never corrupts
+the latest restorable step (the fault-injection test kills saves midway).
+
+Mesh-agnostic restore: leaves are stored as full (unsharded) numpy arrays,
+so a run restarted on a *different* mesh/devices count just device_puts each
+leaf with the new sharding — elastic re-scaling (DESIGN.md §7).  On a real
+multi-host pod the same layout is written per-process for the process's
+addressable shards; this box has one process, so full arrays are exact.
+
+``CheckpointManager`` adds async save (background thread; ``wait()`` joins)
+and keep-N pruning.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = [
+    "save_checkpoint",
+    "load_checkpoint",
+    "latest_step",
+    "restore_state",
+    "CheckpointManager",
+]
+
+_SEP = "/"
+
+
+def _flatten(state: Any) -> tuple[dict[str, np.ndarray], dict[str, str]]:
+    """Returns (arrays, extended-dtype map).  numpy's npz cannot serialize
+    ml_dtypes extension types (bfloat16, fp8); they are stored as raw-bit
+    views with the true dtype recorded in meta.json."""
+    flat, exts = {}, {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":      # extension dtype (bf16, fp8…)
+            exts[key] = arr.dtype.name
+            arr = arr.view(np.uint8).reshape(arr.shape + (arr.dtype.itemsize,))
+        flat[key] = arr
+    return flat, exts
+
+
+def _path_str(entry) -> str:
+    if isinstance(entry, jax.tree_util.DictKey):
+        return str(entry.key)
+    if isinstance(entry, jax.tree_util.SequenceKey):
+        return str(entry.idx)
+    if isinstance(entry, jax.tree_util.GetAttrKey):
+        return str(entry.name)
+    return str(entry)
+
+
+def save_checkpoint(directory: str, step: int, state: Any, *, keep: int | None = None) -> str:
+    """Write ``state`` for ``step``; returns the published path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat, exts = _flatten(state)
+    np.savez(os.path.join(tmp, "state.npz"), **flat)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "n_leaves": len(flat), "ext_dtypes": exts}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    if keep is not None:
+        prune(directory, keep)
+    return final
+
+
+def list_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "meta.json")):
+                out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def prune(directory: str, keep: int) -> None:
+    steps = list_steps(directory)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)
+
+
+def load_checkpoint(directory: str, step: int | None = None) -> tuple[int, dict[str, np.ndarray]]:
+    """Load the flat array dict for ``step`` (default: latest)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    base = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(base, "meta.json")) as f:
+        meta = json.load(f)
+    exts = meta.get("ext_dtypes", {})
+    with np.load(os.path.join(base, "state.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    if exts:
+        import ml_dtypes
+
+        for k, dtype_name in exts.items():
+            dt = np.dtype(getattr(ml_dtypes, dtype_name))
+            # stored as uint8 with a trailing itemsize axis (see _flatten)
+            flat[k] = flat[k].view(dt)[..., 0]
+    return step, flat
+
+
+def restore_state(template: Any, flat: dict[str, np.ndarray], *, shardings: Any = None) -> Any:
+    """Rebuild the pytree of ``template`` from a flat dict.
+
+    ``shardings``: optional matching pytree of NamedSharding — each leaf is
+    device_put with its sharding (the elastic re-mesh path: full arrays
+    reshard onto whatever mesh is current).
+    """
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    keys = [_SEP.join(_path_str(p) for p in path) for path, _ in paths]
+    missing = [k for k in keys if k not in flat]
+    if missing:
+        raise KeyError(f"checkpoint missing {len(missing)} leaves, e.g. {missing[:3]}")
+    leaves = [flat[k] for k in keys]
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda s: isinstance(s, jax.sharding.Sharding)
+        )
+        leaves = [jax.device_put(l, s) for l, s in zip(leaves, shard_leaves)]
+    else:
+        tmpl_leaves = [l for _, l in paths]
+        leaves = [
+            jax.numpy.asarray(l, dtype=getattr(t, "dtype", None))
+            for l, t in zip(leaves, tmpl_leaves)
+        ]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """keep-N manager with optional async (background-thread) saves."""
+
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+
+    def save(self, step: int, state: Any) -> None:
+        # snapshot to host memory *before* handing to the thread so ongoing
+        # donation/updates can't mutate what we write
+        flat_state = jax.tree.map(lambda x: np.asarray(x), state)
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=save_checkpoint,
+                args=(self.directory, step, flat_state),
+                kwargs={"keep": self.keep},
+                daemon=True,
+            )
+            self._thread.start()
+        else:
+            save_checkpoint(self.directory, step, flat_state, keep=self.keep)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def latest(self) -> int | None:
+        return latest_step(self.directory)
+
+    def restore(self, template: Any, *, step: int | None = None, shardings: Any = None) -> tuple[int, Any]:
+        step, flat = load_checkpoint(self.directory, step)
+        return step, restore_state(template, flat, shardings=shardings)

@@ -1,0 +1,64 @@
+"""Graphi core: computation-graph scheduling engine (the paper's contribution).
+
+Public API re-exports.
+"""
+from .cost_model import (
+    KNL7250,
+    TPUV5E,
+    HardwareModel,
+    graph_costs,
+    interference_multiplier,
+    op_saturation_point,
+    op_time,
+    sequential_makespan,
+)
+from .engine import GraphiEngine, HostRunResult, HostScheduler
+from .graph import Graph, GraphValidationError, OpNode
+from .profiler import ProfileResult, enumerate_symmetric_configs, measure_op_costs, profile
+from .scheduler import Schedule, make_schedule, slot_assignment
+from .simulate import SimConfig, SimResult, TraceEvent, simulate
+from .trace import ascii_timeline, trace_csv
+from .wavefront import (
+    diagonals,
+    is_wavefront_order,
+    lstm_cell,
+    recurrence_graph,
+    sequential_lstm,
+    stacked_wavefront_lstm,
+)
+
+__all__ = [
+    "KNL7250",
+    "TPUV5E",
+    "HardwareModel",
+    "Graph",
+    "GraphValidationError",
+    "OpNode",
+    "GraphiEngine",
+    "HostRunResult",
+    "HostScheduler",
+    "ProfileResult",
+    "Schedule",
+    "SimConfig",
+    "SimResult",
+    "TraceEvent",
+    "ascii_timeline",
+    "trace_csv",
+    "diagonals",
+    "enumerate_symmetric_configs",
+    "graph_costs",
+    "interference_multiplier",
+    "is_wavefront_order",
+    "lstm_cell",
+    "make_schedule",
+    "measure_op_costs",
+    "op_saturation_point",
+    "op_time",
+    "profile",
+    "recurrence_graph",
+    "sequential_lstm",
+    "sequential_makespan",
+    "simulate",
+    "slot_assignment",
+    "stacked_wavefront_lstm",
+]

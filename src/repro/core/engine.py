@@ -1,0 +1,185 @@
+"""GraphiEngine — the paper's execution engine, end to end.
+
+Two runtimes sit behind one facade:
+
+* :class:`HostScheduler` — the **paper-faithful dynamic runtime**: a
+  centralized scheduler (runs on the client thread, §5.2) with critical-path-
+  first priority, per-executor operation buffers (depth 1), executor worker
+  threads, and a triggered-operation return queue. On a multi-device system
+  each executor owns a device group; on this box it demonstrates exact
+  scheduling semantics and is validated against the sequential interpreter.
+
+* **Static plan** (:func:`Schedule` → :func:`slot_assignment`) — the
+  TPU-native path: the CPF schedule is frozen into barrier slots whose ops
+  are stacked/sharded over disjoint sub-meshes (see core/wavefront.py and
+  DESIGN.md §2.1).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping
+
+from .cost_model import HardwareModel, graph_costs
+from .graph import Graph
+from .profiler import ProfileResult, profile
+from .scheduler import Schedule, make_schedule, slot_assignment
+from .simulate import SimConfig, SimResult, TraceEvent, simulate
+
+__all__ = ["GraphiEngine", "HostScheduler", "HostRunResult"]
+
+
+@dataclass
+class HostRunResult:
+    outputs: dict[str, Any]
+    trace: list[TraceEvent]
+    makespan: float
+
+
+class HostScheduler:
+    """Centralized scheduler + N executor threads with per-executor buffers.
+
+    Executors poll *their own* buffer (no shared global queue — the paper's
+    contention fix); on completion they push (op, result) onto the triggered
+    queue, which the scheduler drains (Algorithm 1/2).
+    """
+
+    def __init__(
+        self,
+        graph: Graph,
+        n_executors: int,
+        *,
+        costs: Mapping[str, float] | None = None,
+        buffer_depth: int = 1,
+    ):
+        self.graph = graph
+        self.n_executors = n_executors
+        costs = costs or {n: max(g.flops, 1.0) for n, g in zip(graph.names, graph.nodes)}
+        self.levels = graph.levels({n: float(costs[n]) for n in graph.names})
+        self.buffer_depth = buffer_depth
+
+    def run(self, inputs: Mapping[str, Any] | None = None) -> HostRunResult:
+        g = self.graph
+        inputs = dict(inputs or {})
+        results: dict[str, Any] = {}
+        indeg = {n: g.in_degree(n) for n in g.names}
+        seq = {n: i for i, n in enumerate(g.names)}
+
+        import heapq
+
+        ready: list[tuple[float, int, str]] = []
+        for n in g.names:
+            if indeg[n] == 0:
+                heapq.heappush(ready, (-self.levels[n], seq[n], n))
+
+        buffers = [queue.Queue(maxsize=self.buffer_depth) for _ in range(self.n_executors)]
+        triggered: queue.Queue = queue.Queue()
+        idle = [True] * self.n_executors
+        trace: list[TraceEvent] = []
+        t_origin = time.perf_counter()
+
+        def executor_loop(ex: int) -> None:
+            while True:
+                item = buffers[ex].get()
+                if item is None:
+                    return
+                name, args = item
+                node = g[name]
+                t0 = time.perf_counter() - t_origin
+                if node.fn is None:
+                    out = inputs[name]
+                else:
+                    out = node.fn(*args)
+                t1 = time.perf_counter() - t_origin
+                triggered.put((name, out, ex, t0, t1))
+
+        threads = [
+            threading.Thread(target=executor_loop, args=(e,), daemon=True)
+            for e in range(self.n_executors)
+        ]
+        for t in threads:
+            t.start()
+
+        n_done = 0
+        total = len(g)
+        try:
+            while n_done < total:
+                # fire ready ops at idle executors, highest level first (Alg. 1)
+                while ready and any(idle):
+                    ex = idle.index(True)  # bit-scan analogue
+                    _, _, name = heapq.heappop(ready)
+                    node = g[name]
+                    if not node.deps and name in inputs and node.fn is None:
+                        args: tuple = ()
+                    else:
+                        args = tuple(results[d] for d in node.deps)
+                    idle[ex] = False
+                    buffers[ex].put((name, args))
+                # poll triggered operations (Alg. 1 line 2)
+                name, out, ex, t0, t1 = triggered.get()
+                results[name] = out
+                idle[ex] = True
+                trace.append(TraceEvent(name, ex, t0, t1))
+                n_done += 1
+                for s in g.successors(name):
+                    indeg[s] -= 1
+                    if indeg[s] == 0:
+                        heapq.heappush(ready, (-self.levels[s], seq[s], s))
+        finally:
+            for b in buffers:
+                b.put(None)
+            for t in threads:
+                t.join(timeout=5)
+
+        makespan = max((e.end for e in trace), default=0.0)
+        return HostRunResult(outputs=results, trace=trace, makespan=makespan)
+
+
+@dataclass
+class GraphiEngine:
+    """profile -> schedule -> execute (Fig 4)."""
+
+    graph: Graph
+    hw: HardwareModel
+    n_workers: int | None = None  # defaults to hw.n_workers minus 2 reserved
+    reserved_workers: int = 2     # scheduler core + lightweight executor (§5.2)
+    _profile: ProfileResult | None = field(default=None, repr=False)
+
+    @property
+    def usable_workers(self) -> int:
+        n = self.n_workers if self.n_workers is not None else self.hw.n_workers
+        return max(1, n - self.reserved_workers)
+
+    def profile(self, **kw: Any) -> ProfileResult:
+        self._profile = profile(self.graph, self.hw, n_workers=self.usable_workers, **kw)
+        return self._profile
+
+    def schedule(self, policy: str = "cpf") -> Schedule:
+        p = self._profile or self.profile()
+        return make_schedule(
+            self.graph,
+            self.hw,
+            n_executors=p.best_n_executors,
+            team_size=p.best_team_size,
+            policy=policy,
+        )
+
+    def static_slots(self, policy: str = "cpf") -> list[list[str]]:
+        return slot_assignment(self.graph, self.schedule(policy))
+
+    def simulate(self, policy: str = "cpf", **kw: Any) -> SimResult:
+        p = self._profile or self.profile()
+        cfg = SimConfig(
+            n_executors=p.best_n_executors, team_size=p.best_team_size, policy=policy, **kw
+        )
+        return simulate(self.graph, self.hw, cfg, costs=p.op_costs)
+
+    def execute_host(
+        self, inputs: Mapping[str, Any] | None = None, n_executors: int | None = None
+    ) -> HostRunResult:
+        p = self._profile or self.profile()
+        n = n_executors or p.best_n_executors
+        host = HostScheduler(self.graph, n, costs=p.op_costs)
+        return host.run(inputs)

@@ -1,0 +1,120 @@
+"""The Graphi profiler (paper §4.2).
+
+Two jobs:
+  1. **Configuration search** — enumerate symmetric executor configurations
+     (N executors × K workers each, N·K = available workers) and pick the one
+     with minimal makespan.
+  2. **Per-op cost table** — modelled via the hardware cost model, or
+     *measured* by timing real node ``fn`` executions (usable on this box for
+     CPU ops; on a pod, per-group timing feeds the same interface).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping
+
+from .cost_model import HardwareModel, graph_costs
+from .graph import Graph
+from .simulate import SimConfig, simulate
+
+__all__ = ["ProfileResult", "enumerate_symmetric_configs", "profile", "measure_op_costs"]
+
+
+@dataclass
+class ProfileResult:
+    best_n_executors: int
+    best_team_size: int
+    best_makespan: float
+    # (n_executors, team_size) -> makespan
+    config_makespans: dict[tuple[int, int], float]
+    op_costs: dict[str, float] = field(repr=False, default_factory=dict)
+
+    @property
+    def best_config(self) -> tuple[int, int]:
+        return self.best_n_executors, self.best_team_size
+
+
+def enumerate_symmetric_configs(n_workers: int, max_executors: int | None = None) -> list[tuple[int, int]]:
+    """Symmetric (n_executors, team_size) configs with n_executors a power of
+    two and team_size = floor(n_workers / n_executors) (paper §4.2 / §7.3:
+    64 usable KNL cores -> 1x64, 2x32, ..., 32x2; leftover cores stay idle)."""
+    out: list[tuple[int, int]] = []
+    n = 1
+    while n <= n_workers and (max_executors is None or n <= max_executors):
+        team = n_workers // n
+        if team >= 1:
+            out.append((n, team))
+        n *= 2
+    return out
+
+
+def profile(
+    graph: Graph,
+    hw: HardwareModel,
+    *,
+    n_workers: int,
+    policy: str = "cpf",
+    extra_configs: list[tuple[int, int]] | None = None,
+    measured_costs: Callable[[int], Mapping[str, float]] | None = None,
+    seed: int = 0,
+) -> ProfileResult:
+    """Search symmetric configs; ``measured_costs(team_size)`` optionally
+    overrides the analytic cost table (the paper's first-iterations timing)."""
+    configs = enumerate_symmetric_configs(n_workers)
+    if extra_configs:
+        configs = sorted(set(configs) | set(extra_configs))
+    results: dict[tuple[int, int], float] = {}
+    best: tuple[float, int, int] | None = None
+    best_costs: dict[str, float] = {}
+    for n_exec, team in configs:
+        if measured_costs is not None:
+            costs = dict(measured_costs(team))
+        else:
+            costs = graph_costs(hw, graph, team)
+        cfg = SimConfig(n_executors=n_exec, team_size=team, policy=policy)
+        res = simulate(graph, hw, cfg, costs=costs, seed=seed)
+        results[(n_exec, team)] = res.makespan
+        if best is None or res.makespan < best[0]:
+            best = (res.makespan, n_exec, team)
+            best_costs = costs
+    assert best is not None
+    return ProfileResult(
+        best_n_executors=best[1],
+        best_team_size=best[2],
+        best_makespan=best[0],
+        config_makespans=results,
+        op_costs=best_costs,
+    )
+
+
+def measure_op_costs(
+    graph: Graph,
+    inputs: Mapping[str, Any] | None = None,
+    *,
+    warmup: int = 1,
+    iters: int = 3,
+    block: Callable[[Any], Any] | None = None,
+) -> dict[str, float]:
+    """Measured per-op durations by executing node ``fn``s (paper's profiler
+    records start/end over the first few iterations and averages).
+
+    ``block``: result-synchronizer (e.g. ``lambda x: jax.block_until_ready(x)``)
+    so async dispatch does not distort timings.
+    """
+    sync = block or (lambda x: x)
+    outs = graph.execute(inputs)  # warm caches / compile
+    costs: dict[str, float] = {}
+    for n in graph.topo_order():
+        node = graph[n]
+        if node.fn is None:
+            costs[n] = 0.0
+            continue
+        args = [outs[d] for d in node.deps]
+        for _ in range(warmup):
+            sync(node.fn(*args))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            sync(node.fn(*args))
+        costs[n] = (time.perf_counter() - t0) / iters
+    return costs

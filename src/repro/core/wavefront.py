@@ -1,0 +1,180 @@
+"""Wavefront (anti-diagonal) structure of recurrent computation graphs.
+
+A stacked recurrence (L layers × T timesteps; cell (l,t) depends on (l-1,t)
+and (l,t-1)) admits exactly one maximal parallel pattern: all cells on an
+anti-diagonal d = l + t are independent.  cuDNN hand-codes this for LSTM; the
+paper's headline scheduling result (§7.4) is that critical-path-first
+scheduling *recovers it automatically*.  This module provides:
+
+* ``recurrence_graph``   — build the L×T cell DAG (for the scheduler);
+* ``diagonals``          — the reference wavefront order;
+* ``is_wavefront_order`` — checker used by tests/benchmarks;
+* ``stacked_wavefront_lstm`` — the TPU-native *static plan*: cells of a
+  diagonal stacked on a leading axis (shard it over executor groups; see
+  DESIGN.md §2.1) and swept with ``jax.lax`` control flow.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .graph import Graph, OpNode
+
+__all__ = [
+    "cell_name",
+    "recurrence_graph",
+    "diagonals",
+    "is_wavefront_order",
+    "lstm_cell",
+    "stacked_wavefront_lstm",
+    "sequential_lstm",
+]
+
+
+def cell_name(l: int, t: int) -> str:
+    return f"cell_L{l}_T{t}"
+
+
+def recurrence_graph(
+    n_layers: int,
+    n_steps: int,
+    *,
+    flops_per_cell: float = 0.0,
+    bytes_per_cell: float = 0.0,
+    kind: str = "lstm_cell",
+) -> Graph:
+    """The L×T recurrence DAG with wavefront dependencies."""
+    g = Graph(f"recurrence_{n_layers}x{n_steps}")
+    for t in range(n_steps):
+        for l in range(n_layers):
+            deps = []
+            if l > 0:
+                deps.append(cell_name(l - 1, t))
+            if t > 0:
+                deps.append(cell_name(l, t - 1))
+            g.add(
+                OpNode(
+                    name=cell_name(l, t),
+                    kind=kind,
+                    flops=flops_per_cell,
+                    bytes_in=bytes_per_cell,
+                    bytes_out=bytes_per_cell / 3 if bytes_per_cell else 0.0,
+                    deps=tuple(deps),
+                    meta={"layer": l, "step": t, "diag": l + t},
+                )
+            )
+    return g
+
+
+def diagonals(n_layers: int, n_steps: int) -> list[list[tuple[int, int]]]:
+    out: list[list[tuple[int, int]]] = []
+    for d in range(n_layers + n_steps - 1):
+        wave = [(l, d - l) for l in range(n_layers) if 0 <= d - l < n_steps]
+        out.append(wave)
+    return out
+
+
+def is_wavefront_order(order: Sequence[str], graph: Graph) -> bool:
+    """True iff ops appear in non-decreasing anti-diagonal index."""
+    last = -1
+    for name in order:
+        d = graph[name].meta["diag"]
+        if d < last:
+            return False
+        last = max(last, d)
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Real LSTM execution: sequential reference vs stacked-wavefront static plan.
+# ---------------------------------------------------------------------------
+
+def lstm_cell(params, x, h, c):
+    """Standard LSTM cell. params: dict(Wx [D,4H], Wh [H,4H], b [4H])."""
+    gates = x @ params["Wx"] + h @ params["Wh"] + params["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def sequential_lstm(params_per_layer, xs):
+    """Reference: layer-by-layer ``lax.scan`` (the one-executor interpreter).
+
+    params_per_layer: pytree list of L cell-param dicts (Wx differs for layer 0).
+    xs: [T, B, D] input sequence.  Returns top-layer hidden states [T, B, H].
+    """
+    h = xs
+    for lp in params_per_layer:
+        B = h.shape[1]
+        H = lp["Wh"].shape[0]
+        h0 = jnp.zeros((B, H), h.dtype)
+        c0 = jnp.zeros((B, H), h.dtype)
+
+        def step(carry, x, lp=lp):
+            hh, cc = carry
+            hn, cn = lstm_cell(lp, x, hh, cc)
+            return (hn, cn), hn
+
+        (_, _), h = jax.lax.scan(step, (h0, c0), h)
+    return h
+
+
+def stacked_wavefront_lstm(stacked_params, xs, n_layers: int):
+    """The CPF-recovered diagonal schedule as a *static plan* (DESIGN §2.1).
+
+    All L cells of an anti-diagonal execute as ONE stacked cell op
+    [L, B, ...] — on a pod, the leading L axis is sharded over executor
+    groups, giving the paper's "independent ops on disjoint partitions"
+    without inter-group communication.
+
+    Requires homogeneous cell shapes (D == H for layer 0 via an input
+    projection done by the caller).  stacked_params: dict of arrays with
+    leading layer axis: Wx [L,H,4H], Wh [L,H,4H], b [L,4H].
+    xs: [T, B, H].  Returns top-layer hiddens [T, B, H].
+    """
+    T, B, H = xs.shape
+    L = n_layers
+    n_diag = L + T - 1
+
+    h = jnp.zeros((L, B, H), xs.dtype)       # h[l] = latest hidden of layer l
+    c = jnp.zeros((L, B, H), xs.dtype)
+    # layer l consumes the *previous* output of layer l-1; keep a shift buffer
+    # inbuf[l] = next input for layer l (layer 0 reads the sequence).
+    inbuf = jnp.zeros((L, B, H), xs.dtype)
+    out = jnp.zeros((T, B, H), xs.dtype)
+
+    cell = jax.vmap(lstm_cell, in_axes=(0, 0, 0, 0))
+
+    def diag_step(carry, d):
+        h, c, inbuf, out = carry
+        # feed the sequence into layer 0 when 0 <= d < T
+        x0 = jnp.where(d < T, xs[jnp.minimum(d, T - 1)], jnp.zeros((B, H), xs.dtype))
+        inbuf = inbuf.at[0].set(x0)
+        h_new, c_new = cell(stacked_params, inbuf, h, c)
+        # active mask: layer l is live on diagonal d iff 0 <= d - l < T
+        ls = jnp.arange(L)
+        active = ((d - ls) >= 0) & ((d - ls) < T)
+        m = active[:, None, None]
+        h = jnp.where(m, h_new, h)
+        c = jnp.where(m, c_new, c)
+        # outputs of layer l feed layer l+1 on the next diagonal
+        inbuf = inbuf.at[1:].set(jnp.where(m[:-1], h_new[:-1], 0.0))
+        # top layer emits position t = d - (L-1)
+        t_top = d - (L - 1)
+        emit = (t_top >= 0) & (t_top < T)
+        idx = jnp.clip(t_top, 0, T - 1)
+        out = jax.lax.cond(
+            emit,
+            lambda o: o.at[idx].set(h_new[L - 1]),
+            lambda o: o,
+            out,
+        )
+        return (h, c, inbuf, out), None
+
+    (h, c, inbuf, out), _ = jax.lax.scan(
+        diag_step, (h, c, inbuf, out), jnp.arange(n_diag)
+    )
+    return out

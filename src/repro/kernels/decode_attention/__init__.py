@@ -1,0 +1,3 @@
+from .ops import decode_attention
+
+__all__ = ["decode_attention"]

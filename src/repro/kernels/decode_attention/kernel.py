@@ -1,0 +1,122 @@
+"""Flash-decode Pallas kernel: one query token vs a long KV cache.
+
+Decode is memory-bound (arithmetic intensity ~1 flop/byte: every cached
+K/V byte is read once per step), so the tiling goal is pure streaming:
+grid = (B, S/bk) with the KV axis innermost carrying the online-softmax
+state; all Hq heads of a batch element are processed per tile (q is tiny).
+
+Slot-position masking (``kv_pos`` per cache slot, -1 = empty) makes the
+same kernel serve linear caches and the ring buffers of sliding-window
+archs.  VMEM per step with bk=512, Hkv*hd<=8k: k/v tiles ~8 MB bf16 —
+the tile streams at HBM bandwidth, which IS the roofline for this op.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_kernel_call"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, pos_ref, qpos_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, n_kv: int, G: int, window: int | None, scale: float,
+):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale     # [Hq, hd]
+    k = k_ref[0]                                 # [bk, Hkv, hd]
+    v = v_ref[0]
+    kv_pos = pos_ref[...]                        # [bk]
+    q_pos = qpos_ref[0]
+
+    Hq, hd = q.shape
+    bk, Hkv, _ = k.shape
+    qg = q.reshape(Hkv, G, hd)
+    # s[h, g, c] = sum_d qg[h,g,d] * k[c,h,d]
+    s = jax.lax.dot_general(
+        qg, k.astype(jnp.float32),
+        (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32,
+    )                                            # [Hkv, G, bk]
+    keep = (kv_pos >= 0) & (kv_pos <= q_pos)
+    if window is not None:
+        keep &= kv_pos > q_pos - window
+    s = jnp.where(keep[None, None, :], s, _NEG_INF)
+
+    sm = s.reshape(Hq, bk)
+    m_prev = m_ref[:, :1]
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.maximum(m_prev, sm.max(axis=-1, keepdims=True))
+    p = jnp.exp(sm - m_cur)                      # [Hq, bk]
+    corr = jnp.exp(m_prev - m_cur)
+    l_cur = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    # pv[h, g, d] = sum_c p[h,g,c] * v[c,h,d]
+    pv = jax.lax.dot_general(
+        p.reshape(Hkv, G, bk), v.astype(jnp.float32),
+        (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32,
+    )                                            # [Hkv, G, hd]
+    acc_ref[...] = acc_ref[...] * corr + pv.reshape(Hq, hd)
+    m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_cur, l_ref.shape)
+
+    @pl.when(ik == n_kv - 1)
+    def _done():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_kernel_call(
+    q: jax.Array,        # [B, Hq, hd]
+    k_cache: jax.Array,  # [B, S, Hkv, hd]
+    v_cache: jax.Array,
+    kv_pos: jax.Array,   # [S] int32
+    q_pos: jax.Array,    # [] int32
+    *,
+    window: int | None,
+    block_k: int,
+    interpret: bool,
+) -> jax.Array:
+    B, Hq, hd = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    bk = min(block_k, S)
+    assert S % bk == 0, (S, bk)
+    n_kv = S // bk
+
+    kern = functools.partial(
+        _kernel, n_kv=n_kv, G=G, window=window, scale=hd ** -0.5,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(B, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, Hq, hd), lambda b, ik: (b, 0, 0)),
+            pl.BlockSpec((1, bk, Hkv, hd), lambda b, ik: (b, ik, 0, 0)),
+            pl.BlockSpec((1, bk, Hkv, hd), lambda b, ik: (b, ik, 0, 0)),
+            pl.BlockSpec((bk,), lambda b, ik: (ik,)),
+            pl.BlockSpec((1,), lambda b, ik: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, hd), lambda b, ik: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Hq, hd), jnp.float32),
+            pltpu.VMEM((Hq, 128), jnp.float32),
+            pltpu.VMEM((Hq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, kv_pos, q_pos.reshape(1))

@@ -1,0 +1,37 @@
+"""jit-able wrapper for the flash-decode kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from .kernel import decode_attention_kernel_call
+
+__all__ = ["decode_attention"]
+
+
+@partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attention(
+    q: jax.Array,        # [B, 1, Hq, hd] (model layout) or [B, Hq, hd]
+    k_cache: jax.Array,  # [B, S, Hkv, hd]
+    v_cache: jax.Array,
+    kv_pos: jax.Array,   # [S]
+    q_pos: jax.Array,    # []
+    *,
+    window: int | None = None,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    out = decode_attention_kernel_call(
+        q, k_cache, v_cache,
+        kv_pos.astype(jnp.int32), q_pos.astype(jnp.int32),
+        window=window, block_k=block_k, interpret=interpret,
+    )
+    return out[:, None] if squeeze else out

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for single-token decode attention against a (ring) cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_ref"]
+
+_NEG_INF = -1e30
+
+
+def decode_attention_ref(
+    q: jax.Array,        # [B, Hq, hd]
+    k_cache: jax.Array,  # [B, S, Hkv, hd]
+    v_cache: jax.Array,
+    kv_pos: jax.Array,   # [S] absolute position per slot, -1 = empty
+    q_pos: jax.Array,    # [] absolute position of the query
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    B, Hq, hd = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache.astype(jnp.float32))
+    keep = (kv_pos >= 0) & (kv_pos <= q_pos)
+    if window is not None:
+        keep &= kv_pos > q_pos - window
+    s = jnp.where(keep[None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, hd).astype(q.dtype)

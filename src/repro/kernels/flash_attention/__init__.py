@@ -1,0 +1,3 @@
+from .ops import flash_attention
+
+__all__ = ["flash_attention"]

@@ -1,0 +1,138 @@
+"""Flash-attention forward Pallas kernel (TPU target).
+
+Tiling: grid = (B, Hq, Sq/bq, Skv/bk), KV innermost (``arbitrary`` — it
+carries the online-softmax state in VMEM scratch across iterations; the
+other three axes are ``parallel``).  Per grid step the VMEM working set is
+
+    q tile   [bq, hd]                (bf16)
+    k,v tile [bk, hd]                (bf16)
+    scores   [bq, bk]                (f32, VREG-resident)
+    acc      [bq, hd] + m,l [bq,128] (f32 scratch)
+
+With the default bq=bk=512, hd<=256 this is ~1.8 MB — comfortably inside
+the 16 MB v5e VMEM while keeping the MXU matmul dims >= 128.
+
+Causal/window block pruning: fully-masked KV tiles are skipped via
+``pl.when`` (the scheduling analogue of not dispatching a no-op — on real
+TPU the block's DMA is still issued by the pipeline, so the roofline win is
+the MXU time only; a fully pruned grid via index remapping is noted in
+EXPERIMENTS.md §Perf as a further step).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel_call"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, bq: int, bk: int, n_kv: int, scale: float,
+    causal: bool, window: int | None, q_offset: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # block-level pruning: is any (q, k) pair in this tile live?
+    live = jnp.bool_(True)
+    if causal:
+        # newest q position in tile >= oldest k position in tile
+        live &= (q_offset + iq * bq + bq - 1) >= ik * bk
+    if window is not None:
+        # newest k position > oldest q position - window
+        live &= (ik * bk + bk - 1) > (q_offset + iq * bq - window)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, hd]
+        k = k_ref[0, 0]                                      # [bk, hd]
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k.astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                    # [bq, bk]
+        q_pos = q_offset + iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        if causal:
+            s = jnp.where(k_pos <= q_pos, s, _NEG_INF)
+        if window is not None:
+            s = jnp.where(k_pos > q_pos - window, s, _NEG_INF)
+
+        m_prev = m_ref[:, :1]                                # [bq, 1]
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)                               # [bq, bk]
+        corr = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * corr + p.sum(axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                    # [bq, hd]
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_cur, l_ref.shape)
+
+    @pl.when(ik == n_kv - 1)
+    def _done():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel_call(
+    q: jax.Array,  # [B, Hq, Sq, hd]
+    k: jax.Array,  # [B, Hkv, Skv, hd]
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int | None,
+    q_offset: int,
+    block_q: int,
+    block_k: int,
+    interpret: bool,
+) -> jax.Array:
+    B, Hq, Sq, hd = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    n_q, n_kv = Sq // bq, Skv // bk
+
+    kern = functools.partial(
+        _kernel, bq=bq, bk=bk, n_kv=n_kv, scale=hd ** -0.5,
+        causal=causal, window=window, q_offset=q_offset,
+    )
+    grid = (B, Hq, n_q, n_kv)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),   # acc
+            pltpu.VMEM((bq, 128), jnp.float32),  # m (lane-replicated)
+            pltpu.VMEM((bq, 128), jnp.float32),  # l
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,46 @@
+"""jit-able wrapper: layout policy + block-size selection for the kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import default_interpret
+from .kernel import flash_attention_kernel_call
+
+__all__ = ["flash_attention"]
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, Sq, Hq, hd]  (model layout)
+    k: jax.Array,  # [B, Skv, Hkv, hd]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash attention with GQA/MQA, causal and sliding-window masking.
+
+    Accepts the model's [B, S, H, hd] layout; the kernel runs on
+    [B, H, S, hd] (sequence-minor tiles keep the MXU dims contiguous).
+    Sequence lengths must divide the (clipped) block sizes.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_kernel_call(
+        qt, kt, vt,
+        causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out.transpose(0, 2, 1, 3)

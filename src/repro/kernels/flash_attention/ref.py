@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, sliding window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+_NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,  # [B, Sq, Hq, hd]
+    k: jax.Array,  # [B, Skv, Hkv, hd]
+    v: jax.Array,  # [B, Skv, Hkv, hd]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Materializes the full [Sq, Skv] score matrix — test sizes only."""
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    keep = jnp.ones((Sq, Skv), bool)
+    if causal:
+        keep &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        keep &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(keep[None, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .ops import lstm_cell_fused
+
+__all__ = ["lstm_cell_fused"]

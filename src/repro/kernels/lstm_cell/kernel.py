@@ -1,0 +1,70 @@
+"""Fused LSTM gate/state-update Pallas kernel.
+
+This is the paper's element-wise hot-spot (Fig 2b / §5.2): after the two
+GEMMs (left on the MXU), the cell update is 8+ elementwise ops over
+[N, 4H].  Unfused, each op round-trips HBM; fused, every gate byte is
+read once and h/c written once — the TPU analogue of the paper's
+"stream store" trick for elementwise outputs (§6).
+
+Tiling: grid = (N/bn, H/bh); the wrapper views the gate tensors as
+[N, 4, H] so one BlockSpec block (bn, 4, bh) carries all four gates of a
+tile; i/f/g/o are VREG slices.  All math f32 in-register, stores in the
+caller dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lstm_cell_kernel_call"]
+
+
+def _kernel(gx_ref, gh_ref, b_ref, c_ref, h_ref, cn_ref):
+    g4 = gx_ref[...].astype(jnp.float32) + gh_ref[...].astype(jnp.float32)
+    g4 = g4 + b_ref[...].astype(jnp.float32)[None]   # [bn, 4, bh]
+    i, f, g, o = g4[:, 0], g4[:, 1], g4[:, 2], g4[:, 3]
+    c = c_ref[...].astype(jnp.float32)
+    c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    h_ref[...] = h.astype(h_ref.dtype)
+    cn_ref[...] = c_new.astype(cn_ref.dtype)
+
+
+def lstm_cell_kernel_call(
+    gx: jax.Array,  # [N, 4, H]
+    gh: jax.Array,  # [N, 4, H]
+    b: jax.Array,   # [4, H]
+    c: jax.Array,   # [N, H]
+    *,
+    block_n: int,
+    block_h: int,
+    interpret: bool,
+):
+    N, _, H = gx.shape
+    bn = min(block_n, N)
+    bh = min(block_h, H)
+    assert N % bn == 0 and H % bh == 0, (N, bn, H, bh)
+    grid = (N // bn, H // bh)
+    h, c_new = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, 4, bh), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((bn, 4, bh), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((4, bh), lambda i, j: (0, j)),
+            pl.BlockSpec((bn, bh), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, bh), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bh), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, H), gx.dtype),
+            jax.ShapeDtypeStruct((N, H), c.dtype),
+        ],
+        interpret=interpret,
+    )(gx, gh, b, c)
+    return h, c_new

@@ -1,0 +1,32 @@
+"""jit-able wrapper: [N, 4H] gate layout -> [N, 4, H] tiles for the kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import default_interpret
+from .kernel import lstm_cell_kernel_call
+
+__all__ = ["lstm_cell_fused"]
+
+
+@partial(jax.jit, static_argnames=("block_n", "block_h", "interpret"))
+def lstm_cell_fused(
+    gx: jax.Array,  # [N, 4H]
+    gh: jax.Array,  # [N, 4H]
+    b: jax.Array,   # [4H]
+    c: jax.Array,   # [N, H]
+    *,
+    block_n: int = 256,
+    block_h: int = 512,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = default_interpret()
+    N, H4 = gx.shape
+    H = H4 // 4
+    return lstm_cell_kernel_call(
+        gx.reshape(N, 4, H), gh.reshape(N, 4, H), b.reshape(4, H), c,
+        block_n=block_n, block_h=block_h, interpret=interpret,
+    )

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused LSTM gate/state update."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lstm_cell_ref"]
+
+
+def lstm_cell_ref(gx: jax.Array, gh: jax.Array, b: jax.Array, c: jax.Array):
+    """gx, gh: [N, 4H] (input / recurrent GEMM outputs); b: [4H]; c: [N, H].
+
+    Gate order i|f|g|o; forget-gate bias +1 (the standard init).  Returns
+    (h [N,H], c_new [N,H]).
+    """
+    gates = gx.astype(jnp.float32) + gh.astype(jnp.float32) + b.astype(jnp.float32)
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f + 1.0) * c.astype(jnp.float32) + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h.astype(gx.dtype), c_new.astype(c.dtype)

@@ -1,0 +1,3 @@
+from .ops import moe_gmm
+
+__all__ = ["moe_gmm"]

@@ -1,0 +1,70 @@
+"""Grouped per-expert matmul Pallas kernel (MoE expert FFN).
+
+Experts are the Graphi "executor groups" of the MoE archs (DESIGN.md §5):
+the leading E axis is embarrassingly parallel (sharded over the mesh's
+expert/model axis at the SPMD level; within a chip it is a parallel grid
+dimension).  Per expert this is a standard MXU-blocked matmul:
+
+grid = (E, C/bc, F/bf, D/bd), D innermost accumulating into f32 VMEM
+scratch.  Defaults bc=bf=bd=256 keep every MXU dim >=128 at ~0.8 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["moe_gmm_kernel_call"]
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_d: int):
+    idd = pl.program_id(3)
+
+    @pl.when(idd == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0], w_ref[0],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(idd == n_d - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_gmm_kernel_call(
+    x: jax.Array,  # [E, C, D]
+    w: jax.Array,  # [E, D, F]
+    *,
+    block_c: int,
+    block_f: int,
+    block_d: int,
+    interpret: bool,
+) -> jax.Array:
+    E, C, D = x.shape
+    _, _, F = w.shape
+    bc = min(block_c, C)
+    bf = min(block_f, F)
+    bd = min(block_d, D)
+    assert C % bc == 0 and F % bf == 0 and D % bd == 0, (C, bc, F, bf, D, bd)
+    grid = (E, C // bc, F // bf, D // bd)
+
+    kern = functools.partial(_kernel, n_d=D // bd)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, ic, if_, id_: (e, ic, id_)),
+            pl.BlockSpec((1, bd, bf), lambda e, ic, if_, id_: (e, id_, if_)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, ic, if_, id_: (e, ic, if_)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,29 @@
+"""jit-able wrapper for the grouped-matmul kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import default_interpret
+from .kernel import moe_gmm_kernel_call
+
+__all__ = ["moe_gmm"]
+
+
+@partial(jax.jit, static_argnames=("block_c", "block_f", "block_d", "interpret"))
+def moe_gmm(
+    x: jax.Array,  # [E, C, D]
+    w: jax.Array,  # [E, D, F]
+    *,
+    block_c: int = 256,
+    block_f: int = 256,
+    block_d: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    return moe_gmm_kernel_call(
+        x, w, block_c=block_c, block_f=block_f, block_d=block_d,
+        interpret=interpret,
+    )

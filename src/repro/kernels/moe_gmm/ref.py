@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the grouped (per-expert) matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["moe_gmm_ref"]
+
+
+def moe_gmm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: [E, C, D]; w: [E, D, F] -> [E, C, F] (f32 accumulation)."""
+    out = jnp.einsum(
+        "ecd,edf->ecf",
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(x.dtype)

@@ -1,0 +1,81 @@
+"""RG-LRU linear-recurrence Pallas kernel (Griffin / recurrentgemma).
+
+Same VMEM schedule as ssm_scan (chunk-resident associative scan, state
+carried in scratch across the innermost sequence-chunk axis) but for a
+diagonal [R]-channel recurrence — the state is a vector, not a matrix,
+and the full sequence of states IS the output.
+
+grid = (B, R/br, S/bs); VMEM per step: a,b tiles [bs, br] f32 + h [1, br].
+Defaults bs=256, br=512 -> ~1 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rglru_scan_kernel_call"]
+
+
+def _combine(x, y):
+    a1, b1 = x
+    a2, b2 = y
+    return a1 * a2, a2 * b1 + b2
+
+
+def _kernel(a_ref, b_ref, hs_ref, hlast_ref, h_ref, *, n_seq: int):
+    isq = pl.program_id(2)
+
+    @pl.when(isq == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)                  # [bs, br]
+    b = b_ref[0].astype(jnp.float32)
+    a_cum, b_scan = jax.lax.associative_scan(_combine, (a, b), axis=0)
+    hs = a_cum * h_ref[0][None] + b_scan              # [bs, br]
+    hs_ref[0] = hs.astype(hs_ref.dtype)
+    h_ref[0] = hs[-1]
+
+    @pl.when(isq == n_seq - 1)
+    def _done():
+        hlast_ref[0] = h_ref[0].astype(hlast_ref.dtype)
+
+
+def rglru_scan_kernel_call(
+    a: jax.Array,  # [B, S, R]
+    b: jax.Array,
+    *,
+    block_r: int,
+    block_s: int,
+    interpret: bool,
+):
+    B, S, R = a.shape
+    br = min(block_r, R)
+    bs = min(block_s, S)
+    assert R % br == 0 and S % bs == 0, (R, br, S, bs)
+    grid = (B, R // br, S // bs)
+
+    kern = functools.partial(_kernel, n_seq=S // bs)
+    hs, h_last = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, br), lambda bb, ir, is_: (bb, is_, ir)),
+            pl.BlockSpec((1, bs, br), lambda bb, ir, is_: (bb, is_, ir)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, br), lambda bb, ir, is_: (bb, is_, ir)),
+            pl.BlockSpec((1, br), lambda bb, ir, is_: (bb, ir)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, R), jnp.float32),
+            jax.ShapeDtypeStruct((B, R), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, br), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return hs, h_last

@@ -1,0 +1,27 @@
+"""jit-able wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import default_interpret
+from .kernel import rglru_scan_kernel_call
+
+__all__ = ["rglru_scan"]
+
+
+@partial(jax.jit, static_argnames=("block_r", "block_s", "interpret"))
+def rglru_scan(
+    a: jax.Array,  # [B, S, R]
+    b: jax.Array,
+    *,
+    block_r: int = 512,
+    block_s: int = 256,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = default_interpret()
+    return rglru_scan_kernel_call(
+        a, b, block_r=block_r, block_s=block_s, interpret=interpret
+    )

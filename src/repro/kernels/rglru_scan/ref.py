@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the RG-LRU gated linear recurrence (Griffin)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rglru_scan_ref"]
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array):
+    """h_t = a_t * h_{t-1} + b_t over axis 1.
+
+    a, b: [B, S, R]; h0: [B, R].  Returns (hs [B, S, R] f32, h_last f32).
+    """
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    h, hs = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (a.astype(jnp.float32).transpose(1, 0, 2), b.astype(jnp.float32).transpose(1, 0, 2)),
+    )
+    return hs.transpose(1, 0, 2), h

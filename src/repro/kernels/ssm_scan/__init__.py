@@ -1,0 +1,3 @@
+from .ops import ssm_scan
+
+__all__ = ["ssm_scan"]

@@ -1,0 +1,89 @@
+"""Mamba selective-scan Pallas kernel.
+
+The GPU reference implementation is a fused CUDA scan over shared memory;
+the TPU-native translation (DESIGN.md §2) keeps the chunk resident in VMEM
+and replaces the per-thread sequential loop with a **within-chunk
+associative scan** (log2(bs) VPU passes) — sequential chains don't
+vectorize on the VPU, associative combines do.  The recurrent state h is
+carried across sequence chunks in VMEM scratch (grid's innermost,
+``arbitrary`` axis), so HBM traffic is exactly one read of a/b/c and one
+write of y: the memory roofline for this op.
+
+grid = (B, D/bd, S/bs); VMEM per step: a,b tiles [bs, bd, St] f32 +
+h scratch [bd, St].  Defaults bs=128, bd=128, St=16 -> ~2.2 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssm_scan_kernel_call"]
+
+
+def _combine(x, y):
+    a1, b1 = x
+    a2, b2 = y
+    return a1 * a2, a2 * b1 + b2
+
+
+def _kernel(a_ref, b_ref, c_ref, y_ref, hlast_ref, h_ref, *, n_seq: int):
+    isq = pl.program_id(2)
+
+    @pl.when(isq == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)      # [bs, bd, St]
+    b = b_ref[0].astype(jnp.float32)
+    c = c_ref[0].astype(jnp.float32)      # [bs, St]
+
+    a_cum, b_scan = jax.lax.associative_scan(_combine, (a, b), axis=0)
+    hs = a_cum * h_ref[...][None] + b_scan           # [bs, bd, St]
+    y_ref[0] = (hs * c[:, None, :]).sum(axis=-1).astype(y_ref.dtype)
+    h_ref[...] = hs[-1]
+
+    @pl.when(isq == n_seq - 1)
+    def _done():
+        hlast_ref[0] = h_ref[...].astype(hlast_ref.dtype)
+
+
+def ssm_scan_kernel_call(
+    a: jax.Array,  # [B, S, D, St]
+    b: jax.Array,
+    c: jax.Array,  # [B, S, St]
+    *,
+    block_d: int,
+    block_s: int,
+    interpret: bool,
+):
+    B, S, D, St = a.shape
+    bd = min(block_d, D)
+    bs = min(block_s, S)
+    assert D % bd == 0 and S % bs == 0, (D, bd, S, bs)
+    grid = (B, D // bd, S // bs)
+
+    kern = functools.partial(_kernel, n_seq=S // bs)
+    y, h_last = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, bd, St), lambda bb, id_, is_: (bb, is_, id_, 0)),
+            pl.BlockSpec((1, bs, bd, St), lambda bb, id_, is_: (bb, is_, id_, 0)),
+            pl.BlockSpec((1, bs, St), lambda bb, id_, is_: (bb, is_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, bd), lambda bb, id_, is_: (bb, is_, id_)),
+            pl.BlockSpec((1, bd, St), lambda bb, id_, is_: (bb, id_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D, St), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, St), jnp.float32)],
+        interpret=interpret,
+    )(a, b, c)
+    return y, h_last

@@ -1,0 +1,28 @@
+"""jit-able wrapper for the selective-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import default_interpret
+from .kernel import ssm_scan_kernel_call
+
+__all__ = ["ssm_scan"]
+
+
+@partial(jax.jit, static_argnames=("block_d", "block_s", "interpret"))
+def ssm_scan(
+    a: jax.Array,  # [B, S, D, St]
+    b: jax.Array,
+    c: jax.Array,  # [B, S, St]
+    *,
+    block_d: int = 128,
+    block_s: int = 128,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = default_interpret()
+    return ssm_scan_kernel_call(
+        a, b, c, block_d=block_d, block_s=block_s, interpret=interpret
+    )

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the Mamba selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssm_scan_ref"]
+
+
+def ssm_scan_ref(
+    a: jax.Array,  # [B, S, D, St] decay (exp(dt*A))
+    b: jax.Array,  # [B, S, D, St] input contribution (dt*B*x)
+    c: jax.Array,  # [B, S, St]    output projection
+    h0: jax.Array,  # [B, D, St]
+):
+    """h_t = a_t * h_{t-1} + b_t;   y_t = sum_s h_t[:, s] * c_t[s].
+
+    Returns (y [B, S, D] f32, h_last [B, D, St] f32).
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+
+    def step(h, inp):
+        a_t, b_t, c_t = inp
+        h = a_t * h + b_t
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    h, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (a.transpose(1, 0, 2, 3), b.transpose(1, 0, 2, 3), c.transpose(1, 0, 2)),
+    )
+    return ys.transpose(1, 0, 2), h

@@ -1,0 +1,185 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import (device count locks at first init).  The 512
+# host devices exist ONLY in this process — smoke tests / benches see 1.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes, verify HBM fit, and extract the roofline
+numerators (per-device HLO flops / bytes / collective traffic).
+
+    PYTHONPATH=src python -m repro.launch.dryrun                # full sweep
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multipod
+    PYTHONPATH=src python -m repro.launch.dryrun --out results/dryrun.json
+
+Single-pod (16,16) carries the roofline table; the multi-pod (2,16,16) pass
+proves the ``pod`` axis shards (gradient all-reduce crosses DCN) for every
+cell.  Train cells whose compiled footprint exceeds HBM are auto-bumped to
+more microbatches and recompiled (the paper's profiler feedback loop, Fig 4,
+applied to memory instead of makespan).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis.roofline import TPU_V5E, roofline_report
+from repro.configs.base import SHAPES, get_config, list_archs
+from repro.launch.cells import build_cell, skip_reason
+from repro.launch.mesh import describe_mesh, make_production_mesh
+from repro.models.api import model_flops
+
+MAX_MEMORY_BUMPS = 4
+
+
+def run_cell(arch: str, shape_name: str, mesh, *, want_roofline: bool, verbose: bool = False) -> dict:
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": describe_mesh(mesh)}
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        rec["status"] = "skip"
+        rec["reason"] = reason
+        return rec
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape_name, mesh)
+        for bump in range(MAX_MEMORY_BUMPS + 1):
+            compiled = cell.lower().compile()
+            ma = compiled.memory_analysis()
+            bpd = ma.temp_size_in_bytes + ma.argument_size_in_bytes
+            # bump until the bf16-native estimate fits (raw CPU bytes carry
+            # the f32-dot-promotion artifact — see record fields below)
+            bf16_est_loop = ma.argument_size_in_bytes + ma.temp_size_in_bytes / 2
+            if bf16_est_loop <= TPU_V5E.hbm_bytes or cell.kind != "train":
+                break
+            mb = cell.plan.microbatches * 2
+            from repro.dist.sharding import batch_axes
+            dp = 1
+            for a in batch_axes(mesh, cell.shape.global_batch):
+                dp *= mesh.shape[a]
+            if mb > cell.shape.global_batch // max(dp, 1) or cell.shape.global_batch % mb:
+                break
+            if verbose:
+                print(f"    bump: {bpd/1e9:.1f} GB/dev > HBM; microbatches -> {mb}")
+            cell = build_cell(arch, shape_name, mesh, plan=cell.plan.override(microbatches=mb))
+        rec["status"] = "ok"
+        rec["kind"] = cell.kind
+        rec["microbatches"] = cell.plan.microbatches
+        rec["seq_shard"] = cell.plan.seq_shard
+        rec["fsdp"] = cell.plan.fsdp
+        rec["compile_s"] = round(time.time() - t0, 1)
+        rec["bytes_per_device"] = int(bpd)
+        rec["arg_bytes"] = int(ma.argument_size_in_bytes)
+        rec["temp_bytes"] = int(ma.temp_size_in_bytes)
+        rec["fits_hbm"] = bool(bpd <= TPU_V5E.hbm_bytes)
+        # XLA:CPU promotes bf16 dots to f32, so big temps (gathered weights,
+        # activations around matmuls) are ~2x their TPU size; report the
+        # bf16-native band [args + temp/2, raw] (EXPERIMENTS.md §Dry-run)
+        bf16_est = int(ma.argument_size_in_bytes + ma.temp_size_in_bytes / 2)
+        rec["bytes_per_device_bf16_est"] = bf16_est
+        rec["fits_hbm_bf16_est"] = bool(bf16_est <= TPU_V5E.hbm_bytes)
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        rec["xla_flops_per_dev"] = float(ca.get("flops", 0.0))
+        if want_roofline:
+            cfg = get_config(arch)
+            rep = roofline_report(
+                arch=arch,
+                shape=shape_name,
+                mesh_desc=rec["mesh"],
+                n_chips=n_chips,
+                hlo_text=compiled.as_text(),
+                model_flops_total=model_flops(cfg, SHAPES[shape_name]),
+                bytes_per_device=bpd,
+            )
+            rec["roofline"] = {
+                "hlo_flops": rep.hlo_flops,
+                "hlo_bytes": rep.hlo_bytes,
+                "collective_bytes": rep.collective_bytes,
+                "collectives": {k: [int(c), float(b)] for k, (c, b) in rep.collectives.items()},
+                "compute_s": rep.compute_s,
+                "memory_s": rep.memory_s,
+                "collective_s": rep.collective_s,
+                "dominant": rep.dominant,
+                "model_flops_total": rep.model_flops_total,
+                "useful_ratio": rep.useful_ratio,
+                "roofline_fraction": rep.roofline_fraction,
+                "mfu_bound": rep.mfu_bound(),
+                "note": rep.note,
+            }
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        rec["compile_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def summarize(records: list[dict]) -> str:
+    rows = []
+    for r in records:
+        if r["status"] == "skip":
+            rows.append(f"SKIP {r['arch']:22s} {r['shape']:12s} {r['mesh']:28s} ({r['reason'][:40]}...)")
+        elif r["status"] == "fail":
+            rows.append(f"FAIL {r['arch']:22s} {r['shape']:12s} {r['mesh']:28s} {r['error'][:60]}")
+        else:
+            fit = "fits" if r.get("fits_hbm_bf16_est", r["fits_hbm"]) else "OVER"
+            extra = ""
+            if "roofline" in r:
+                rf = r["roofline"]
+                extra = (f" dom={rf['dominant'][:4]} c={rf['compute_s']*1e3:8.2f}ms"
+                         f" m={rf['memory_s']*1e3:8.2f}ms x={rf['collective_s']*1e3:8.2f}ms"
+                         f" useful={rf['useful_ratio']:.2f}")
+            rows.append(
+                f"OK   {r['arch']:22s} {r['shape']:12s} {r['mesh']:28s} "
+                f"{r['bytes_per_device']/1e9:6.1f}GB/dev {fit} mb={r['microbatches']}"
+                f" {r['compile_s']:6.1f}s{extra}"
+            )
+    n_ok = sum(1 for r in records if r["status"] == "ok")
+    n_skip = sum(1 for r in records if r["status"] == "skip")
+    n_fail = sum(1 for r in records if r["status"] == "fail")
+    rows.append(f"-- {n_ok} ok / {n_skip} skip / {n_fail} fail --")
+    return "\n".join(rows)
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default=None, help="one architecture id (default: all)")
+    p.add_argument("--shape", default=None, help="one shape name (default: all)")
+    p.add_argument("--mesh", choices=("pod", "multipod", "both"), default="both")
+    p.add_argument("--out", default="results/dryrun.json")
+    p.add_argument("--verbose", action="store_true")
+    args = p.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = []
+    if args.mesh in ("pod", "both"):
+        meshes.append((make_production_mesh(), True))
+    if args.mesh in ("multipod", "both"):
+        meshes.append((make_production_mesh(multi_pod=True), False))
+
+    records = []
+    for mesh, want_roofline in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mesh, want_roofline=want_roofline,
+                               verbose=args.verbose)
+                records.append(rec)
+                line = summarize([rec]).splitlines()[0]
+                print(line, flush=True)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {args.out}")
+    print(summarize(records).splitlines()[-1])
+    return 1 if any(r["status"] == "fail" for r in records) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

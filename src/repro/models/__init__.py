@@ -1,0 +1,25 @@
+"""Model zoo: unified transformer/SSM/hybrid backbones + paper nets."""
+from . import api, transformer
+from .api import (
+    input_specs,
+    lm_loss,
+    make_batch,
+    model_decode_flops,
+    model_train_flops,
+)
+from .transformer import decode_step, forward, init_cache, init_params, prefill
+
+__all__ = [
+    "api",
+    "transformer",
+    "input_specs",
+    "lm_loss",
+    "make_batch",
+    "model_decode_flops",
+    "model_train_flops",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "prefill",
+]

@@ -1,0 +1,121 @@
+"""Model API: loss, batch construction (real + ShapeDtypeStruct specs),
+and analytic FLOPs accounting for the roofline (MODEL_FLOPS = 6·N·D).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from . import transformer
+
+__all__ = [
+    "lm_loss",
+    "make_batch",
+    "input_specs",
+    "model_train_flops",
+    "model_decode_flops",
+    "token_counts",
+]
+
+IGNORE = -1  # label id excluded from the loss (e.g. image positions)
+
+
+def lm_loss(cfg: ModelConfig, params, batch: dict, *, remat: bool = False,
+            aux_weight: float = 0.01):
+    """Mean next-token cross-entropy (+ MoE aux). Labels = tokens shifted
+    inside ``make_batch``; positions with label == IGNORE are masked."""
+    logits, aux = transformer.forward(cfg, params, batch, remat=remat)
+    labels = batch["labels"]
+    # frontends prepend non-text positions: align logits tail to labels
+    if logits.shape[1] != labels.shape[1]:
+        logits = logits[:, -labels.shape[1]:]
+    mask = (labels != IGNORE) & (labels < cfg.vocab_size)
+    safe = jnp.where(mask, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+def token_counts(cfg: ModelConfig, shape: ShapeSpec) -> tuple[int, int, int]:
+    """(batch, text_len, total_seq) honoring frontend stubs: vlm reserves
+    n_image_tokens of the sequence budget for patch embeddings."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        n_img = min(cfg.n_image_tokens, S // 2)
+        return B, S - n_img, S
+    return B, S, S
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeSpec, key, *, kind: str | None = None) -> dict:
+    """Concrete random batch (smoke tests / examples)."""
+    kind = kind or shape.kind
+    B, S_text, _ = token_counts(cfg, shape)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "decode":
+        return {"tokens": jax.random.randint(k1, (B, 1), 0, cfg.vocab_size)}
+    batch: dict[str, Any] = {
+        "tokens": jax.random.randint(k1, (B, S_text), 0, cfg.vocab_size)
+    }
+    if kind == "train":
+        labels = jnp.roll(batch["tokens"], -1, axis=1).at[:, -1].set(IGNORE)
+        batch["labels"] = labels
+    if cfg.frontend == "vision":
+        n_img = min(cfg.n_image_tokens, shape.seq_len // 2)
+        batch["image_embeds"] = jax.random.normal(k2, (B, n_img, cfg.d_model), cfg.dtype)
+    if cfg.frontend == "audio":
+        batch["frames"] = jax.random.normal(k3, (B, cfg.encoder_len, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, *, kind: str | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run lowering —
+    weak-type-correct, no device allocation)."""
+    kind = kind or shape.kind
+    B, S_text, _ = token_counts(cfg, shape)
+    i32 = jnp.int32
+    if kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    specs: dict[str, Any] = {"tokens": jax.ShapeDtypeStruct((B, S_text), i32)}
+    if kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, S_text), i32)
+    if cfg.frontend == "vision":
+        n_img = min(cfg.n_image_tokens, shape.seq_len // 2)
+        specs["image_embeds"] = jax.ShapeDtypeStruct((B, n_img, cfg.d_model), cfg.dtype)
+    if cfg.frontend == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_len, cfg.d_model), cfg.dtype)
+    return specs
+
+
+def model_train_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS for a train step: 6·N·D (N = active params, D = tokens).
+
+    The standard accounting (Kaplan): 2ND forward + 4ND backward, attention
+    excluded (reported separately in the roofline table's notes).
+    """
+    tokens = shape.global_batch * shape.seq_len
+    return 6.0 * cfg.active_params() * tokens
+
+
+def model_decode_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS for one decode step: 2·N_active·B (one token per seq)."""
+    return 2.0 * cfg.active_params() * shape.global_batch
+
+
+def model_prefill_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS for a prefill (forward only): 2·N_active·tokens."""
+    tokens = shape.global_batch * shape.seq_len
+    return 2.0 * cfg.active_params() * tokens
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec, kind: str | None = None) -> float:
+    kind = kind or shape.kind
+    if kind == "train":
+        return model_train_flops(cfg, shape)
+    if kind == "prefill":
+        return model_prefill_flops(cfg, shape)
+    return model_decode_flops(cfg, shape)

@@ -1,0 +1,86 @@
+"""Griffin RG-LRU recurrent block (recurrentgemma-2b) — arXiv:2402.19427.
+
+Structure (recurrent block): two input branches; the recurrent branch goes
+linear -> causal conv1d(4) -> RG-LRU; output is the gated product through an
+output projection. The RG-LRU recurrence:
+
+    r_t = sigmoid(W_r x_t)          (recurrence gate)
+    i_t = sigmoid(W_i x_t)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Uses the shared chunked linear-recurrence scan (Pallas: kernels/rglru_scan).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import causal_conv1d, linear_recurrence_chunked
+
+__all__ = ["init_rglru_params", "rglru_block", "rglru_decode_step", "init_rglru_cache"]
+
+_C = 8.0
+
+
+def init_rglru_params(key, cfg, dtype):
+    d, r, K = cfg.d_model, cfg.rnn_width, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    sr = r ** -0.5
+    return {
+        "w_y": (jax.random.normal(ks[0], (d, r)) * s).astype(dtype),
+        "w_x": (jax.random.normal(ks[1], (d, r)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (K, r)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((r,), dtype),
+        "w_r": (jax.random.normal(ks[3], (r, r)) * sr).astype(dtype),
+        "w_i": (jax.random.normal(ks[4], (r, r)) * sr).astype(dtype),
+        # Lambda init so that a ~ uniform(0.9, 0.999) at r=0.5 (Griffin A.2-ish)
+        "lam": jnp.log(jnp.expm1(jnp.linspace(0.3, 1.3, r))).astype(jnp.float32),
+        "w_o": (jax.random.normal(ks[5], (r, d)) * sr).astype(dtype),
+    }
+
+
+def _rglru_gates(params, xc):
+    """xc: [B, L, R] post-conv. Returns (a, b) fp32 for the recurrence."""
+    r_gate = jax.nn.sigmoid(jnp.einsum("blr,rs->bls", xc, params["w_r"]).astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(jnp.einsum("blr,rs->bls", xc, params["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r_gate
+    a = jnp.exp(log_a)
+    gated_x = i_gate * xc.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated_x
+    return a, b
+
+
+def rglru_block(params, x: jax.Array, *, chunk: int = 128):
+    """x: [B, L, D] -> [B, L, D] (train / prefill, h0 = 0)."""
+    B, L, _ = x.shape
+    y_branch = jax.nn.gelu(jnp.einsum("bld,dr->blr", x, params["w_y"]))
+    x_branch = jnp.einsum("bld,dr->blr", x, params["w_x"])
+    xc, _ = causal_conv1d(x_branch, params["conv_w"])
+    xc = xc + params["conv_b"]
+
+    a, b = _rglru_gates(params, xc)
+    h0 = jnp.zeros((B, a.shape[-1]), jnp.float32)
+    hs, _ = linear_recurrence_chunked(a, b, h0, chunk=chunk)  # [B, L, R]
+    out = (hs.astype(x.dtype) * y_branch)
+    return jnp.einsum("blr,rd->bld", out, params["w_o"])
+
+
+def init_rglru_cache(cfg, batch: int, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.rnn_width), dtype),
+    }
+
+
+def rglru_decode_step(params, x: jax.Array, cache):
+    """x: [B, 1, D] -> ([B, 1, D], new cache)."""
+    y_branch = jax.nn.gelu(jnp.einsum("bld,dr->blr", x, params["w_y"]))
+    x_branch = jnp.einsum("bld,dr->blr", x, params["w_x"])
+    xc, conv_cache = causal_conv1d(x_branch, params["conv_w"], cache["conv"])
+    xc = xc + params["conv_b"]
+    a, b = _rglru_gates(params, xc)
+    h = a[:, 0] * cache["h"] + b[:, 0]  # [B, R]
+    out = (h[:, None, :].astype(x.dtype) * y_branch)
+    return jnp.einsum("blr,rd->bld", out, params["w_o"]), {"h": h, "conv": conv_cache}

@@ -1,0 +1,128 @@
+"""Mamba-1 block (falcon-mamba-7b) — selective state-space model.
+
+Train/prefill uses the chunked linear-recurrence scan
+(layers.linear_recurrence_chunked; Pallas kernel: kernels/ssm_scan).
+Decode is a single-step state update against an SSM state cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import causal_conv1d, linear_recurrence_chunked
+
+__all__ = [
+    "init_mamba_params",
+    "mamba_block",
+    "ssm_scan_fused",
+    "mamba_decode_step",
+    "init_mamba_cache",
+]
+
+
+def init_mamba_params(key, cfg, dtype):
+    d, di, st, dr, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (K, di)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (di, dr + 2 * st)) * di ** -0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (dr, di)) * dr ** -0.5).astype(dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01))).astype(jnp.float32),
+        # S4D-real init: A = -(1..state)
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def _ssm_inputs(params, xconv, dtype):
+    """Shared projection math. xconv: [B, L, di] post-conv post-silu."""
+    dbc = jnp.einsum("bld,de->ble", xconv, params["x_proj"])
+    dr = params["dt_proj"].shape[0]
+    st = params["A_log"].shape[1]
+    dt, B_ssm, C_ssm = jnp.split(dbc, [dr, dr + st], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,rd->bld", dt, params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"]
+    )  # [B, L, di]
+    A = -jnp.exp(params["A_log"])  # [di, st]
+    # discretize: a = exp(dt*A) [B,L,di,st]; b = dt*B*x
+    a = jnp.exp(dt[..., None] * A)
+    b = dt[..., None] * B_ssm[:, :, None, :].astype(jnp.float32) * xconv[..., None].astype(jnp.float32)
+    return a, b, C_ssm
+
+
+def ssm_scan_fused(params, xconv: jax.Array, h0: jax.Array, *, chunk: int = 128):
+    """Chunk-fused selective scan: discretization (a = exp(dt*A), b = dt*B*x)
+    is constructed INSIDE the chunk body and contracted with C immediately,
+    so the [B, L, d_inner, state] f32 tensors never materialize — only one
+    [B, chunk, d_inner, state] tile is live per step (the jnp mirror of the
+    kernels/ssm_scan VMEM schedule).  The unfused formulation dominated
+    falcon-mamba's memory roofline at ~1.4 TB/step/device
+    (EXPERIMENTS.md §Perf D1).
+
+    xconv: [B, L, di] post-conv/silu.  Returns (y [B, L, di] f32, h_last).
+    """
+    B, L, di = xconv.shape
+    if L % chunk != 0:
+        chunk = L
+    n = L // chunk
+    xc = jnp.moveaxis(xconv.reshape(B, n, chunk, di), 1, 0)  # [n, B, chunk, di]
+
+    def combine(u, v):
+        a1, b1 = u
+        a2, b2 = v
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, x_blk):
+        a, b, C_blk = _ssm_inputs(params, x_blk, xconv.dtype)   # [B,chunk,di,st]
+        a_cum, b_scan = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = a_cum * h[:, None] + b_scan
+        y = jnp.einsum("blds,bls->bld", hs, C_blk.astype(jnp.float32))
+        return hs[:, -1], y
+
+    h_last, ys = jax.lax.scan(body, h0, xc)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, L, di)
+    return y, h_last
+
+
+def mamba_block(params, x: jax.Array, *, chunk: int = 128):
+    """x: [B, L, D] -> [B, L, D] (training / prefill path, h0 = 0)."""
+    B, L, D = x.shape
+    xz = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    xpart, res = jnp.split(xz, 2, axis=-1)  # [B, L, di] each
+    xconv, _ = causal_conv1d(xpart, params["conv_w"])
+    xconv = jax.nn.silu(xconv + params["conv_b"])
+
+    di, st = params["A_log"].shape
+    h0 = jnp.zeros((B, di, st), jnp.float32)
+    y, _ = ssm_scan_fused(params, xconv, h0, chunk=chunk)
+    y = y + params["D"] * xconv.astype(jnp.float32)
+    y = y * jax.nn.silu(res.astype(jnp.float32))
+    return jnp.einsum("bld,de->ble", y.astype(x.dtype), params["out_proj"])
+
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba_decode_step(params, x: jax.Array, cache):
+    """Single-token step. x: [B, 1, D] -> ([B, 1, D], new cache)."""
+    xz = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    xpart, res = jnp.split(xz, 2, axis=-1)
+    xconv, conv_cache = causal_conv1d(xpart, params["conv_w"], cache["conv"])
+    xconv = jax.nn.silu(xconv + params["conv_b"])
+
+    a, b, C_ssm = _ssm_inputs(params, xconv, x.dtype)  # L = 1
+    h = a[:, 0] * cache["h"] + b[:, 0]  # [B, di, st]
+    y = jnp.einsum("bds,bs->bd", h, C_ssm[:, 0].astype(jnp.float32))[:, None, :]
+    y = y + params["D"] * xconv.astype(jnp.float32)
+    y = y * jax.nn.silu(res.astype(jnp.float32))
+    out = jnp.einsum("bld,de->ble", y.astype(x.dtype), params["out_proj"])
+    return out, {"h": h, "conv": conv_cache}

@@ -1,0 +1,97 @@
+"""Sharded AdamW (decoupled weight decay) with global-norm clipping.
+
+Pure functions over pytrees: moments inherit the parameter sharding (the
+state specs in dist/sharding.py map them through the same rules), so the
+optimizer is ZeRO-0 by default; ZeRO-3-style sharding over the data axis is
+a spec change, not a code change (param_pspecs/state_pspecs fsdp=True).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # moments dtype: fp32 master moments regardless of param dtype
+    moment_dtype: Any = jnp.float32
+
+
+def adamw_init(params: Any, cfg: AdamWConfig | None = None) -> dict:
+    cfg = cfg or AdamWConfig()
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def _decayable(path) -> bool:
+    """Weight decay applies to matrices, not to norms/biases/1-d gains."""
+    for e in reversed(path):
+        if isinstance(e, jax.tree_util.DictKey):
+            name = str(e.key)
+            return not (name.startswith("ln") or name in (
+                "final_norm", "enc_norm", "conv_b", "dt_bias", "lam", "D", "b"
+            ))
+    return True
+
+
+def adamw_update(
+    grads: Any,
+    params: Any,
+    opt_state: dict,
+    cfg: AdamWConfig | None = None,
+    lr: jax.Array | float | None = None,
+) -> tuple[Any, dict, dict[str, jax.Array]]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    cfg = cfg or AdamWConfig()
+    step = opt_state["step"] + 1
+    lr_t = jnp.asarray(cfg.lr if lr is None else lr, jnp.float32)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(path, g, p, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and _decayable(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+        return p_new, m_new.astype(cfg.moment_dtype), v_new.astype(cfg.moment_dtype)
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, g, p, m, v: upd(path, g, p, m, v),
+        grads, params, opt_state["m"], opt_state["v"],
+    )
+    # unzip the (p, m, v) leaf tuples
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    metrics = {"grad_norm": gnorm, "lr": lr_t, "clip_scale": scale}
+    return new_params, new_state, metrics

@@ -1,0 +1,21 @@
+"""Learning-rate schedules (pure jnp, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule", "linear_warmup_cosine"]
+
+
+def cosine_schedule(step, base_lr: float, total_steps: int, min_frac: float = 0.1):
+    t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return base_lr * (min_frac + (1.0 - min_frac) * cos)
+
+
+def linear_warmup_cosine(
+    step, base_lr: float, warmup_steps: int, total_steps: int, min_frac: float = 0.1
+):
+    s = step.astype(jnp.float32)
+    warm = base_lr * s / max(warmup_steps, 1)
+    decay = cosine_schedule(step - warmup_steps, base_lr, max(total_steps - warmup_steps, 1), min_frac)
+    return jnp.where(s < warmup_steps, warm, decay)

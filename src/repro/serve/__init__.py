@@ -1,0 +1,4 @@
+"""Serving: prefill/decode step functions and the batched engine."""
+from .step import make_decode_step, make_prefill_step
+
+__all__ = ["make_decode_step", "make_prefill_step"]

@@ -1,0 +1,110 @@
+"""Batched serving engine (length-bucketed wave batching).
+
+Requests queue up; the engine groups them into waves of up to ``max_batch``
+requests of *equal prompt length* (the KV cache's slot-position table is
+shared across the batch, so mixed-length padding would let pad tokens leak
+into attention — the bucketing keeps batched decode bit-identical to
+unbatched, which tests/test_serve_engine.py asserts).  Each wave: one
+batched prefill, then a batched greedy/temperature decode loop until every
+sequence hits EOS or its token budget.  This is the throughput-oriented
+regime the ``decode_*`` dry-run shapes model; latency-oriented continuous
+batching would interleave prefills into the decode stream — noted as
+future work in DESIGN.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+__all__ = ["Request", "ServeConfig", "ServeEngine"]
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray              # [S] int32
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+    # filled by the engine:
+    output: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    temperature: float = 0.0        # 0 => greedy
+    pad_id: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig, *, rng_seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.queue: list[Request] = []
+        self._key = jax.random.key(rng_seed)
+        self._prefill = jax.jit(lambda p, c, b: transformer.prefill(cfg, p, b, c))
+        self._decode = jax.jit(lambda p, c, t: transformer.decode_step(cfg, p, t, c))
+
+    def submit(self, req: Request) -> None:
+        assert len(req.prompt) + req.max_new_tokens <= self.scfg.max_len, "budget"
+        self.queue.append(req)
+
+    # -- one wave -------------------------------------------------------------
+    def _run_wave(self, wave: Sequence[Request]) -> None:
+        cfg, scfg = self.cfg, self.scfg
+        B = len(wave)
+        Ls = {len(r.prompt) for r in wave}
+        assert len(Ls) == 1, "waves are length-bucketed"
+        S = Ls.pop()
+        toks = np.stack([r.prompt for r in wave]).astype(np.int32)
+        cache = transformer.init_cache(cfg, B, scfg.max_len)
+        logits, cache = self._prefill(self.params, cache, {"tokens": jnp.asarray(toks)})
+
+        active = np.ones(B, bool)
+        budget = np.array([r.max_new_tokens for r in wave])
+        n_emitted = np.zeros(B, int)
+        while active.any():
+            if scfg.temperature > 0:
+                self._key, sub = jax.random.split(self._key)
+                nxt = jax.random.categorical(sub, logits / scfg.temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            nxt_np = np.asarray(nxt, np.int32)
+            for i, r in enumerate(wave):
+                if not active[i]:
+                    continue
+                t = int(nxt_np[i])
+                r.output.append(t)
+                n_emitted[i] += 1
+                if (r.eos_id is not None and t == r.eos_id) or n_emitted[i] >= budget[i]:
+                    active[i] = False
+                    r.done = True
+            if not active.any():
+                break
+            logits, cache = self._decode(self.params, cache, nxt_np[:, None])
+
+    # -- public ----------------------------------------------------------------
+    def run(self) -> list[Request]:
+        """Drain the queue; returns completed requests in submit order."""
+        buckets: dict[int, list[Request]] = {}
+        for r in self.queue:
+            buckets.setdefault(len(r.prompt), []).append(r)
+        self.queue = []
+        done: list[Request] = []
+        for _, reqs in sorted(buckets.items()):
+            for lo in range(0, len(reqs), self.scfg.max_batch):
+                wave = reqs[lo : lo + self.scfg.max_batch]
+                self._run_wave(wave)
+                done.extend(wave)
+        done.sort(key=lambda r: r.request_id)
+        return done

@@ -1,0 +1,31 @@
+"""Serving step functions (the ``serve_step`` the decode/long shapes lower).
+
+``decode`` shapes lower ONE new token against a KV cache of ``seq_len`` —
+the memory-bandwidth-bound regime; caches are sequence-sharded over the
+model axis (dist/sharding.cache_pspecs) so MQA archs scale too.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+__all__ = ["make_prefill_step", "make_decode_step"]
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, cache, batch):
+        return transformer.prefill(cfg, params, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, cache, tokens):
+        logits, cache = transformer.decode_step(cfg, params, tokens, cache)
+        return logits, cache
+
+    return decode_step

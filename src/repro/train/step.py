@@ -1,0 +1,97 @@
+"""The pjit train step: loss -> grad -> AdamW, with microbatch gradient
+accumulation (``lax.scan``) and per-layer remat.
+
+State layout (a flat dict so dist/sharding.state_pspecs can rule-match):
+
+    {"params": ..., "m": ..., "v": ..., "step": i32[]}
+
+Microbatching reshapes every batch leaf [B, ...] -> [n_micro, B/n_micro, ...]
+and accumulates fp32 grads across a scan — the standard pod-scale recipe for
+fitting large global batches; it also bounds activation memory to one
+microbatch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api as model_api
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import linear_warmup_cosine
+
+__all__ = ["TrainStepConfig", "init_train_state", "make_train_step"]
+
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    microbatches: int = 1
+    remat: bool = True
+    adamw: AdamWConfig = field(default_factory=AdamWConfig)
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    grad_dtype: Any = jnp.float32    # accumulation dtype
+
+
+def init_train_state(cfg: ModelConfig, key, adamw_cfg: AdamWConfig | None = None) -> dict:
+    from repro.models import transformer
+
+    params = transformer.init_params(cfg, key)
+    opt = adamw_init(params, adamw_cfg)
+    return {"params": params, **opt}
+
+
+def make_train_step(
+    model_cfg: ModelConfig, tcfg: TrainStepConfig | None = None
+) -> Callable[[dict, dict], tuple[dict, dict]]:
+    tcfg = tcfg or TrainStepConfig()
+
+    def loss_fn(params, mb):
+        loss, parts = model_api.lm_loss(model_cfg, params, mb, remat=tcfg.remat)
+        return loss, parts
+
+    def grads_of(params, batch):
+        n = tcfg.microbatches
+        if n == 1:
+            (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(tcfg.grad_dtype), grads)
+            return grads, loss, parts
+
+        def split(x):
+            b = x.shape[0]
+            assert b % n == 0, f"batch {b} not divisible by microbatches {n}"
+            return x.reshape((n, b // n) + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def acc_step(carry, mb):
+            g_acc, loss_acc, ce_acc, aux_acc = carry
+            (loss, parts), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(tcfg.grad_dtype), g_acc, g
+            )
+            return (g_acc, loss_acc + loss, ce_acc + parts["ce"], aux_acc + parts["aux"]), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, tcfg.grad_dtype), params)
+        z = jnp.zeros((), jnp.float32)
+        (g, loss, ce, aux), _ = jax.lax.scan(acc_step, (g0, z, z, z), micro)
+        inv = 1.0 / n
+        grads = jax.tree.map(lambda x: x * inv, g)
+        return grads, loss * inv, {"ce": ce * inv, "aux": aux * inv}
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params = state["params"]
+        grads, loss, parts = grads_of(params, batch)
+        lr = linear_warmup_cosine(
+            state["step"] + 1, tcfg.adamw.lr, tcfg.warmup_steps, tcfg.total_steps
+        )
+        opt_state = {"m": state["m"], "v": state["v"], "step": state["step"]}
+        new_params, new_opt, om = adamw_update(grads, params, opt_state, tcfg.adamw, lr=lr)
+        new_state = {"params": new_params, **new_opt}
+        metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"], **om}
+        return new_state, metrics
+
+    return train_step

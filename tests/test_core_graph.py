@@ -1,0 +1,131 @@
+"""Unit + property tests for the graph IR."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import Graph, GraphValidationError, OpNode
+
+
+def diamond() -> Graph:
+    g = Graph("diamond")
+    g.add_op("a", flops=1.0)
+    g.add_op("b", flops=2.0, deps=("a",))
+    g.add_op("c", flops=3.0, deps=("a",))
+    g.add_op("d", flops=4.0, deps=("b", "c"))
+    return g
+
+
+def test_duplicate_rejected():
+    g = Graph()
+    g.add_op("a")
+    with pytest.raises(GraphValidationError):
+        g.add_op("a")
+
+
+def test_unknown_dep_rejected():
+    g = Graph()
+    with pytest.raises(GraphValidationError):
+        g.add_op("b", deps=("missing",))
+
+
+def test_topo_order_diamond():
+    g = diamond()
+    order = g.topo_order()
+    assert order[0] == "a" and order[-1] == "d"
+    assert set(order) == {"a", "b", "c", "d"}
+
+
+def test_sources_sinks_width():
+    g = diamond()
+    assert g.sources() == ["a"]
+    assert g.sinks() == ["d"]
+    assert g.width() == 2
+
+
+def test_levels_and_critical_path():
+    g = diamond()
+    costs = {n.name: n.flops for n in g.nodes}
+    lev = g.levels(costs)
+    # level = own cost + longest tail
+    assert lev["d"] == 4.0
+    assert lev["b"] == 2.0 + 4.0
+    assert lev["c"] == 3.0 + 4.0
+    assert lev["a"] == 1.0 + 7.0
+    length, path = g.critical_path(costs)
+    assert length == 8.0
+    assert path == ["a", "c", "d"]
+
+
+def test_execute_sequential():
+    g = Graph()
+    g.add_op("x", fn=lambda: 3)
+    g.add_op("y", fn=lambda: 4)
+    g.add_op("z", deps=("x", "y"), fn=lambda a, b: a * b)
+    assert g.execute()["z"] == 12
+
+
+def test_execute_with_inputs():
+    g = Graph()
+    g.add_op("x")
+    g.add_op("y", deps=("x",), fn=lambda v: v + 1)
+    assert g.execute({"x": 41})["y"] == 42
+
+
+def test_subgraph():
+    g = diamond()
+    sub = g.subgraph(["a", "b"])
+    assert len(sub) == 2
+    assert sub.sinks() == ["b"]
+
+
+# ---------------------------------------------------------------------------
+# Property tests: random DAGs
+# ---------------------------------------------------------------------------
+
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(2, 25))
+    g = Graph("rand")
+    for i in range(n):
+        # only depend on earlier nodes => acyclic by construction
+        pool = list(range(i))
+        deps = draw(
+            st.lists(st.sampled_from(pool), max_size=min(3, i), unique=True)
+        ) if pool else []
+        cost = draw(st.floats(1e-6, 1e-2, allow_nan=False))
+        g.add_op(f"n{i}", flops=cost * 1e9, deps=tuple(f"n{d}" for d in deps))
+    return g
+
+
+@settings(max_examples=50, deadline=None)
+@given(random_dag())
+def test_topo_order_respects_deps(g):
+    pos = {n: i for i, n in enumerate(g.topo_order())}
+    for node in g.nodes:
+        for d in node.deps:
+            assert pos[d] < pos[node.name]
+
+
+@settings(max_examples=50, deadline=None)
+@given(random_dag())
+def test_levels_monotone_along_edges(g):
+    costs = {n.name: max(n.flops, 1.0) for n in g.nodes}
+    lev = g.levels(costs)
+    for node in g.nodes:
+        for d in node.deps:
+            # a dep's level strictly exceeds its consumer's (positive costs)
+            assert lev[d] > lev[node.name]
+
+
+@settings(max_examples=50, deadline=None)
+@given(random_dag())
+def test_critical_path_is_valid_path_and_max(g):
+    costs = {n.name: max(n.flops, 1.0) for n in g.nodes}
+    length, path = g.critical_path(costs)
+    # path edges exist
+    for a, b in zip(path, path[1:]):
+        assert a in g.predecessors(b)
+    assert length == pytest.approx(sum(costs[p] for p in path))
+    # no single node exceeds it; total >= longest node
+    assert length >= max(costs.values()) - 1e-9
+    assert length <= sum(costs.values()) + 1e-9

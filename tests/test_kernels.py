@@ -1,0 +1,222 @@
+"""Per-kernel shape/dtype sweeps: every Pallas kernel (interpret=True on this
+CPU box) asserted allclose against its ref.py pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.lstm_cell import lstm_cell_fused
+from repro.kernels.lstm_cell.ref import lstm_cell_ref
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.moe_gmm.ref import moe_gmm_ref
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.ssm_scan import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+def tol_for(dt):
+    return dict(rtol=3e-2, atol=3e-2) if dt == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+def allclose(a, b, dt):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32), **tol_for(dt)
+    )
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sq,Skv,Hq,Hkv,hd,causal,window",
+    [
+        (2, 128, 128, 4, 1, 64, True, None),    # MQA causal
+        (1, 256, 256, 8, 2, 32, True, 64),      # GQA sliding window
+        (2, 64, 64, 4, 4, 16, False, None),     # MHA bidirectional
+        (1, 128, 256, 4, 2, 64, False, None),   # cross-attn (Sq != Skv)
+        (1, 192, 192, 2, 1, 128, True, None),   # non-pow2 seq, big head
+    ],
+)
+def test_flash_attention(B, Sq, Skv, Hq, Hkv, hd, causal, window, dt):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, hd), dt)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, hd), dt)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, hd), dt)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    allclose(out, ref, dt)
+
+
+def test_flash_attention_matches_model_layer():
+    """Kernel agrees with the chunked_attention the models actually run."""
+    from repro.models.layers import chunked_attention
+
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 128, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 128, 2, 32), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64, interpret=True)
+    ref = chunked_attention(q, k, v, causal=True, chunk=64, q_chunk=64)
+    allclose(out, ref, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,Hq,Hkv,hd,window,fill",
+    [
+        (2, 256, 8, 1, 64, None, 200),   # MQA partial cache
+        (1, 512, 16, 4, 32, 128, 512),   # GQA ring/window
+        (2, 128, 4, 4, 16, None, 60),
+    ],
+)
+def test_decode_attention(B, S, Hq, Hkv, hd, window, fill, dt):
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (B, Hq, hd), dt)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, hd), dt)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, hd), dt)
+    kv_pos = jnp.where(jnp.arange(S) < fill, jnp.arange(S), -1)
+    q_pos = jnp.asarray(fill, jnp.int32)
+    out = decode_attention(q, kc, vc, kv_pos, q_pos, window=window,
+                           block_k=64, interpret=True)
+    ref = decode_attention_ref(q, kc, vc, kv_pos, q_pos, window=window)
+    allclose(out, ref, dt)
+
+
+def test_decode_attention_ring_buffer():
+    """Ring-buffer slots (shuffled absolute positions) mask correctly."""
+    B, S, H, hd = 1, 64, 4, 32
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, H, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, H, hd), jnp.float32)
+    # slot s holds absolute position (s + 17) % 96 — some beyond q_pos
+    kv_pos = (jnp.arange(S) + 17) % 96
+    q_pos = jnp.asarray(48, jnp.int32)
+    out = decode_attention(q, kc, vc, kv_pos, q_pos, window=32, block_k=32, interpret=True)
+    ref = decode_attention_ref(q, kc, vc, kv_pos, q_pos, window=32)
+    allclose(out, ref, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# lstm cell
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("N,H,bn,bh", [(64, 128, 32, 64), (32, 256, 32, 128), (128, 64, 64, 64)])
+def test_lstm_cell(N, H, bn, bh, dt):
+    ks = jax.random.split(jax.random.key(4), 4)
+    gx = jax.random.normal(ks[0], (N, 4 * H), dt)
+    gh = jax.random.normal(ks[1], (N, 4 * H), dt)
+    b = jax.random.normal(ks[2], (4 * H,), dt)
+    c = jax.random.normal(ks[3], (N, H), dt)
+    h1, c1 = lstm_cell_fused(gx, gh, b, c, block_n=bn, block_h=bh, interpret=True)
+    h2, c2 = lstm_cell_ref(gx, gh, b, c)
+    allclose(h1, h2, dt)
+    allclose(c1, c2, dt)
+
+
+def test_lstm_cell_matches_wavefront_cell():
+    """Kernel math == core.wavefront.lstm_cell (the scheduling demo's cell)."""
+    from repro.core.wavefront import lstm_cell
+
+    ks = jax.random.split(jax.random.key(5), 5)
+    B, D, H = 8, 32, 32
+    params = {
+        "Wx": jax.random.normal(ks[0], (D, 4 * H)) * 0.1,
+        "Wh": jax.random.normal(ks[1], (H, 4 * H)) * 0.1,
+        "b": jax.random.normal(ks[2], (4 * H,)) * 0.1,
+    }
+    x = jax.random.normal(ks[3], (B, D))
+    h = jax.random.normal(ks[4], (B, H))
+    c = jnp.zeros((B, H))
+    h_ref, c_ref = lstm_cell(params, x, h, c)
+    h_k, c_k = lstm_cell_fused(
+        x @ params["Wx"], h @ params["Wh"], params["b"], c,
+        block_n=8, block_h=32, interpret=True,
+    )
+    allclose(h_k, h_ref, jnp.float32)
+    allclose(c_k, c_ref, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,D,St,bd,bs", [(2, 128, 64, 8, 32, 32), (1, 256, 32, 16, 32, 64)])
+def test_ssm_scan(B, S, D, St, bd, bs):
+    ks = jax.random.split(jax.random.key(6), 3)
+    a = jax.random.uniform(ks[0], (B, S, D, St), jnp.float32, 0.5, 0.999)
+    b = jax.random.normal(ks[1], (B, S, D, St), jnp.float32) * 0.1
+    c = jax.random.normal(ks[2], (B, S, St), jnp.float32)
+    y1, h1 = ssm_scan(a, b, c, block_d=bd, block_s=bs, interpret=True)
+    y2, h2 = ssm_scan_ref(a, b, c, jnp.zeros((B, D, St), jnp.float32))
+    allclose(y1, y2, jnp.float32)
+    allclose(h1, h2, jnp.float32)
+
+
+def test_ssm_scan_state_carries_across_chunks():
+    """Decay ~1 makes early inputs visible at the end — catches chunk-reset bugs."""
+    B, S, D, St = 1, 128, 8, 4
+    a = jnp.full((B, S, D, St), 0.999, jnp.float32)
+    b = jnp.zeros((B, S, D, St)).at[:, 0].set(1.0)
+    c = jnp.ones((B, S, St), jnp.float32)
+    y, h_last = ssm_scan(a, b, c, block_d=8, block_s=16, interpret=True)
+    # h at t decays as 0.999^t; y_t = sum_s h_t
+    expect = St * 0.999 ** (S - 1)
+    np.testing.assert_allclose(float(y[0, -1, 0]), expect, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# rglru scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,R,br,bs", [(2, 256, 128, 64, 64), (1, 128, 64, 64, 32)])
+def test_rglru_scan(B, S, R, br, bs):
+    ks = jax.random.split(jax.random.key(7), 2)
+    a = jax.random.uniform(ks[0], (B, S, R), jnp.float32, 0.5, 0.999)
+    b = jax.random.normal(ks[1], (B, S, R), jnp.float32) * 0.1
+    hs1, hl1 = rglru_scan(a, b, block_r=br, block_s=bs, interpret=True)
+    hs2, hl2 = rglru_scan_ref(a, b, jnp.zeros((B, R), jnp.float32))
+    allclose(hs1, hs2, jnp.float32)
+    allclose(hl1, hl2, jnp.float32)
+
+
+def test_rglru_matches_model_recurrence():
+    """Kernel == the chunked pure-jnp recurrence the models run."""
+    from repro.models.layers import linear_recurrence_chunked
+
+    ks = jax.random.split(jax.random.key(8), 2)
+    B, S, R = 2, 128, 64
+    a = jax.random.uniform(ks[0], (B, S, R), jnp.float32, 0.5, 0.999)
+    b = jax.random.normal(ks[1], (B, S, R), jnp.float32) * 0.1
+    hs_k, hl_k = rglru_scan(a, b, block_r=64, block_s=32, interpret=True)
+    hs_m, hl_m = linear_recurrence_chunked(a, b, jnp.zeros((B, R), jnp.float32), chunk=64)
+    allclose(hs_k, hs_m, jnp.float32)
+    allclose(hl_k, hl_m, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# moe gmm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,D,F", [(4, 64, 128, 96), (8, 32, 64, 64), (2, 128, 32, 128)])
+def test_moe_gmm(E, C, D, F, dt):
+    ks = jax.random.split(jax.random.key(9), 2)
+    x = jax.random.normal(ks[0], (E, C, D), dt)
+    w = jax.random.normal(ks[1], (E, D, F), dt) * (1.0 / np.sqrt(D))
+    o1 = moe_gmm(x, w, block_c=32, block_f=32, block_d=32, interpret=True)
+    o2 = moe_gmm_ref(x, w)
+    allclose(o1, o2, dt)

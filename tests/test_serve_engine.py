@@ -1,0 +1,83 @@
+"""Wave-batching serving engine: batching-invariance, stop conditions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import transformer
+from repro.serve.engine import Request, ServeConfig, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("gemma-2b", smoke=True)
+    params = transformer.init_params(cfg, jax.random.key(3))
+    return cfg, params
+
+
+def _reference_decode(cfg, params, prompt, n_new):
+    """Unbatched greedy reference."""
+    cache = transformer.init_cache(cfg, 1, len(prompt) + n_new + 1)
+    logits, cache = transformer.prefill(
+        cfg, params, {"tokens": jnp.asarray(prompt)[None]}, cache)
+    out = []
+    for _ in range(n_new):
+        t = int(jnp.argmax(logits, -1)[0])
+        out.append(t)
+        logits, cache = transformer.decode_step(
+            cfg, params, jnp.asarray([[t]], jnp.int32), cache)
+    return out
+
+
+def test_batched_equals_unbatched_same_lengths(model):
+    cfg, params = model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, size=12).astype(np.int32) for _ in range(3)]
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=3, max_len=48))
+    for i, pr in enumerate(prompts):
+        eng.submit(Request(request_id=i, prompt=pr, max_new_tokens=6))
+    done = eng.run()
+    for r in done:
+        ref = _reference_decode(cfg, params, r.prompt, 6)
+        assert r.output == ref, (r.request_id, r.output, ref)
+
+
+def test_mixed_lengths_wave_left_padding(model):
+    cfg, params = model
+    rng = np.random.default_rng(1)
+    lens = [5, 11, 17]
+    prompts = [rng.integers(1, cfg.vocab_size, size=l).astype(np.int32) for l in lens]
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=3, max_len=64))
+    for i, pr in enumerate(prompts):
+        eng.submit(Request(request_id=i, prompt=pr, max_new_tokens=4))
+    done = eng.run()
+    for r in done:
+        ref = _reference_decode(cfg, params, r.prompt, 4)
+        assert r.output == ref, (len(r.prompt), r.output, ref)
+
+
+def test_eos_stops_early(model):
+    cfg, params = model
+    rng = np.random.default_rng(2)
+    pr = rng.integers(1, cfg.vocab_size, size=8).astype(np.int32)
+    ref = _reference_decode(cfg, params, pr, 8)
+    eos = ref[2]  # force a stop at the 3rd emitted token
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=1, max_len=32))
+    eng.submit(Request(request_id=0, prompt=pr, max_new_tokens=8, eos_id=eos))
+    (r,) = eng.run()
+    assert r.done and r.output[-1] == eos and len(r.output) <= 3 + ref[:3].count(eos)
+
+
+def test_budget_respected_and_queue_drains(model):
+    cfg, params = model
+    rng = np.random.default_rng(3)
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_len=40))
+    for i in range(5):  # 5 requests, waves of 2
+        eng.submit(Request(request_id=i,
+                           prompt=rng.integers(1, cfg.vocab_size, size=6).astype(np.int32),
+                           max_new_tokens=3))
+    done = eng.run()
+    assert len(done) == 5
+    assert all(len(r.output) == 3 and r.done for r in done)
+    assert not eng.queue
