@@ -1,7 +1,7 @@
 """Shared benchmark plumbing: result rows, band checks, CSV."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 __all__ = ["Row", "check_band", "format_table", "to_csv"]
 

@@ -7,7 +7,6 @@ against the sequential interpreter.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -22,7 +22,6 @@ matmul reports exactly trip x 2MNK).
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 
@@ -55,6 +54,7 @@ _REF_RE = re.compile(r"%([\w.\-]+)")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
 _COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
 
 # opcodes that move/reinterpret data: zero flops, zero HBM-traffic charge
@@ -230,9 +230,8 @@ class _Bf16Resolver:
             out = True
         elif ins.opcode in _CHAIN_OPS and ins.operands:
             out = self.born_bf16(ins.operands[0], depth + 1)
-        elif ins.opcode == "fusion":
-            cm = _CALLS_RE.search(ins.line)
-            comp = self.comps.get(cm.group(1)) if cm else None
+        elif ins.opcode in ("fusion", "call"):
+            comp = self.comps.get(_called_comp(ins) or "")
             if comp is not None and all(
                 i.opcode in _CHAIN_OPS or i.opcode == "parameter" for i in comp.instrs
             ):
@@ -249,14 +248,21 @@ class _Bf16Resolver:
         return float(raw)
 
 
+def _called_comp(ins: Instr) -> str | None:
+    """Callee name of a fusion/call site (``calls=`` or ``to_apply=``)."""
+    m = _CALLS_RE.search(ins.line) or _TO_APPLY_RE.search(ins.line)
+    return m.group(1) if m else None
+
+
 def _is_pure_convert(ins: Instr, comps: dict[str, Computation]) -> bool:
     """bf16<->f32 convert chains are XLA:CPU dot-promotion artifacts — on the
-    TPU target they are fused away or absent; charge them zero traffic."""
+    TPU target they are fused away or absent; charge them zero traffic.
+    XLA:CPU emits them bare, as fusions, or as ``call``s of a
+    ``%parallel_convert`` computation (outer-dimension-partitioned)."""
     if ins.opcode == "convert":
         return True
-    if ins.opcode == "fusion":
-        cm = _CALLS_RE.search(ins.line)
-        comp = comps.get(cm.group(1)) if cm else None
+    if ins.opcode in ("fusion", "call"):
+        comp = comps.get(_called_comp(ins) or "")
         if comp is not None and comp.instrs and all(
             i.opcode in ("parameter", "convert", "bitcast", "copy", "reshape", "transpose")
             for i in comp.instrs
@@ -415,11 +421,11 @@ def _comp_cost(
         if op in ("fusion", "call", "async-start", "map"):
             if rs is not None and _is_pure_convert(ins, comps):
                 continue
-            cm = _CALLS_RE.search(ins.line) or re.search(r"to_apply=%?([\w.\-]+)", ins.line)
-            if cm:
-                inner = _comp_cost(cm.group(1), comps, sizes, memo, stack, rs)
+            callee = _called_comp(ins)
+            if callee:
+                inner = _comp_cost(callee, comps, sizes, memo, stack, rs)
                 total.add(inner, 1.0, bytes_too=False)  # flops only; VMEM-internal
-                total.bytes += _fusion_io_bytes(ins, comps, cm.group(1), sizes, rs)
+                total.bytes += _fusion_io_bytes(ins, comps, callee, sizes, rs)
             else:
                 total.bytes += _instr_bytes(ins, sizes, rs)
             continue
@@ -520,10 +526,10 @@ def _toplevel_multipliers(comps: dict[str, Computation], entry: str) -> dict[str
                             mult[sub] = m * trip
                             frontier.append(sub)
             elif ins.opcode == "call":
-                cm = _CALLS_RE.search(ins.line)
-                if cm and cm.group(1) not in mult:
-                    mult[cm.group(1)] = m
-                    frontier.append(cm.group(1))
+                callee = _called_comp(ins)  # calls= or to_apply= form
+                if callee and callee not in mult:
+                    mult[callee] = m
+                    frontier.append(callee)
     return mult
 
 
@@ -546,9 +552,9 @@ def top_flops(hlo_text: str, k: int = 20) -> list[tuple[float, str, str]]:
             elif ins.opcode == "convolution":
                 f = _conv_flops(ins, sizes)
             elif ins.opcode in ("fusion", "map"):
-                cm = _CALLS_RE.search(ins.line)
-                if cm:
-                    f = _comp_cost(cm.group(1), comps, sizes, memo, set()).flops
+                callee = _called_comp(ins)
+                if callee:
+                    f = _comp_cost(callee, comps, sizes, memo, set()).flops
             elif ins.opcode not in _FREE_OPS and ins.opcode not in _MOVE_OPS \
                     and ins.opcode not in ("while", "call", "conditional"):
                 f = _shape_elems(ins.shape_text)
@@ -578,9 +584,9 @@ def top_traffic(hlo_text: str, k: int = 20) -> list[tuple[float, str, str]]:
         for ins in comp.instrs:
             if ins.opcode in _FREE_OPS or ins.opcode in ("while", "call"):
                 continue
-            if ins.opcode in ("fusion", "call", "map"):
-                cm = _CALLS_RE.search(ins.line)
-                b = _fusion_io_bytes(ins, comps, cm.group(1), sizes) if cm else _instr_bytes(ins, sizes)
+            if ins.opcode in ("fusion", "map"):  # 'call' skipped above; body in mult
+                callee = _called_comp(ins)
+                b = _fusion_io_bytes(ins, comps, callee, sizes) if callee else _instr_bytes(ins, sizes)
             else:
                 b = _instr_bytes(ins, sizes)
             meta = re.search(r'op_name="([^"]*)"', ins.line)

@@ -7,7 +7,7 @@ config for CPU tests). ``get_config(name, smoke=...)`` is the lookup.
 from __future__ import annotations
 
 import importlib
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Any
 
 import jax.numpy as jnp

@@ -20,9 +20,9 @@ import queue
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Mapping
+from typing import Any, Mapping
 
-from .cost_model import HardwareModel, graph_costs
+from .cost_model import HardwareModel
 from .graph import Graph
 from .profiler import ProfileResult, profile
 from .scheduler import Schedule, make_schedule, slot_assignment
@@ -168,6 +168,13 @@ class GraphiEngine:
 
     def static_slots(self, policy: str = "cpf") -> list[list[str]]:
         return slot_assignment(self.graph, self.schedule(policy))
+
+    def static_plan(self, mesh: Any, *, policy: str = "cpf", axis: str | None = None):
+        """Bind the frozen CPF schedule to device placement: barrier slots
+        over disjoint executor sub-meshes (repro.dist.executor_mesh)."""
+        from repro.dist.executor_mesh import plan_from_schedule
+
+        return plan_from_schedule(self.graph, self.schedule(policy), mesh, axis=axis)
 
     def simulate(self, policy: str = "cpf", **kw: Any) -> SimResult:
         p = self._profile or self.profile()

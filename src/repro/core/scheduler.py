@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from .cost_model import HardwareModel, graph_costs
+from .cost_model import HardwareModel
 from .graph import Graph
 from .simulate import SimConfig, SimResult, simulate
 

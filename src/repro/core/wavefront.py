@@ -15,7 +15,7 @@ scheduling *recovers it automatically*.  This module provides:
 """
 from __future__ import annotations
 
-from typing import Callable, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

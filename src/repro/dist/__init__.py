@@ -1,0 +1,58 @@
+"""``repro.dist`` — the sharding / collectives subsystem.
+
+Graphi's premise is that independent ops pay off only when they run on
+*disjoint* resource partitions (paper §1); on an SPMD mesh the partitioning
+layer IS the interference-isolation mechanism.  This package is that layer:
+
+* :mod:`repro.dist.sharding` — logical-axis mesh context (``MeshCtx`` /
+  ``use_mesh`` / ``shard``) plus the PartitionSpec factories every launch
+  path lowers through (``param_pspecs``, ``state_pspecs``, ``batch_pspecs``,
+  ``cache_pspecs``, ``batch_axes``).
+* :mod:`repro.dist.overlap` — compute/communication-overlapped collective
+  matmuls (``ring_allgather_matmul`` / ``ring_reducescatter_matmul``).
+* :mod:`repro.dist.compress` — gradient compression (``compressed_psum``)
+  with error feedback for the DCN-crossing ``pod`` axis.
+* :mod:`repro.dist.executor_mesh` — the bridge from the scheduler's barrier
+  slots (``core.scheduler.slot_assignment``) to disjoint executor sub-meshes
+  (DESIGN.md §2.1).
+"""
+from . import compress, executor_mesh, overlap, sharding
+from .executor_mesh import (
+    ExecutorGroup,
+    ExecutorMeshPlan,
+    executor_groups,
+    executor_stacked_mesh,
+    plan_from_schedule,
+)
+from .sharding import (
+    MeshCtx,
+    batch_axes,
+    batch_pspecs,
+    cache_pspecs,
+    mesh_context,
+    param_pspecs,
+    shard,
+    state_pspecs,
+    use_mesh,
+)
+
+__all__ = [
+    "compress",
+    "executor_mesh",
+    "overlap",
+    "sharding",
+    "ExecutorGroup",
+    "ExecutorMeshPlan",
+    "executor_groups",
+    "executor_stacked_mesh",
+    "plan_from_schedule",
+    "MeshCtx",
+    "batch_axes",
+    "batch_pspecs",
+    "cache_pspecs",
+    "mesh_context",
+    "param_pspecs",
+    "shard",
+    "state_pspecs",
+    "use_mesh",
+]

@@ -1,0 +1,49 @@
+"""Compressed cross-replica gradient reduction with error feedback.
+
+The multi-pod mesh's ``pod`` axis crosses DCN (launch/mesh.py), where
+gradient all-reduces are bandwidth-bound; 8-bit quantization cuts the wire
+format 4x.  Plain quantized reduction biases training, so we carry the
+per-shard quantization residual forward (error feedback, Seide et al. /
+Karimireddy et al.): what this step rounds away is added back before the
+next step's quantization, making the *accumulated* gradient unbiased.
+
+``compressed_psum`` is a ``shard_map`` collective: each shard contributes
+its local gradient block, the wire carries int8 codes + one f32 scale, and
+every shard reconstructs the mean.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compressed_psum"]
+
+
+def compressed_psum(
+    g: jax.Array,
+    err: jax.Array,
+    *,
+    axis_name: str,
+    bits: int = 8,
+) -> tuple[jax.Array, jax.Array]:
+    """Mean of ``g`` over ``axis_name`` through a ``bits``-wide codebook.
+
+    Returns ``(mean, new_err)``: the dequantized cross-shard mean (same
+    shape as the local ``g``) and this shard's new quantization residual,
+    to be fed back as ``err`` on the next call.
+    """
+    if not 2 <= bits <= 8:
+        raise ValueError(f"bits={bits}: int8 wire format supports 2..8 bits")
+    comp = g.astype(jnp.float32) + err.astype(jnp.float32)
+    levels = float(2 ** (bits - 1) - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(comp)) / levels, 1e-12)  # scalar/shard
+    q = jnp.clip(jnp.round(comp / scale), -levels, levels)
+    new_err = comp - q * scale
+
+    # wire format: int8 codes + one f32 scale per shard (the compression)
+    codes = jax.lax.all_gather(q.astype(jnp.int8), axis_name)   # [n, ...]
+    scales = jax.lax.all_gather(scale, axis_name)               # [n]
+    n = codes.shape[0]
+    bshape = (n,) + (1,) * g.ndim
+    mean = (codes.astype(jnp.float32) * scales.reshape(bshape)).sum(0) / n
+    return mean, new_err

@@ -1,0 +1,79 @@
+"""Compute/communication-overlapped collective matmuls (``shard_map`` body).
+
+The Graphi argument applied to collectives: a blocking all-gather before a
+matmul serializes communication and compute on the same "executor"; the ring
+formulation below decomposes both into per-shard chunks so each ``ppermute``
+hop is in flight while the previous chunk's partial matmul runs (the
+"collective matmul" of Wang et al., and the TPU pattern XLA's latency-hiding
+scheduler overlaps).  Both functions are numerically exact — chunk order
+only changes summation order of disjoint blocks.
+
+Usage (under ``shard_map``; see tests/test_dist_multidevice.py)::
+
+    f = shard_map(partial(ring_allgather_matmul, axis_name="model"), mesh=mesh,
+                  in_specs=(P("model", None), P(None, "model")),
+                  out_specs=P(None, "model"))
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ring_allgather_matmul", "ring_reducescatter_matmul"]
+
+
+def _ring_perm(n: int, *, forward: bool) -> list[tuple[int, int]]:
+    step = 1 if forward else -1
+    return [(j, (j + step) % n) for j in range(n)]
+
+
+def ring_allgather_matmul(x: jax.Array, w: jax.Array, *, axis_name: str) -> jax.Array:
+    """``allgather(x, axis) @ w`` without materializing the gather barrier.
+
+    Per shard: ``x`` holds rows [m, k] of the [n*m, k] global operand, ``w``
+    a column block [k, c].  Each of the ``n`` steps multiplies the row chunk
+    currently held and forwards it around the ring; the next hop is issued
+    *before* the local matmul so the transfer overlaps the compute.
+    Returns the full-row output [n*m, c] (out_specs gathers rows).
+    """
+    n = jax.lax.psum(1, axis_name)  # static: mesh extent
+    idx = jax.lax.axis_index(axis_name)
+    m = x.shape[0]
+    perm = _ring_perm(n, forward=False)  # receive from idx+1
+    out = jnp.zeros((n * m, w.shape[1]), jnp.result_type(x, w))
+    cur = x
+    for i in range(n):
+        nxt = jax.lax.ppermute(cur, axis_name, perm) if i + 1 < n else None
+        src = jax.lax.rem(idx + i, n)  # whose rows we currently hold
+        blk = jnp.dot(cur, w).astype(out.dtype)
+        out = jax.lax.dynamic_update_slice(out, blk, (src * m, 0))
+        cur = nxt
+    return out
+
+
+def ring_reducescatter_matmul(x: jax.Array, w: jax.Array, *, axis_name: str) -> jax.Array:
+    """``reducescatter(x @ w, axis)`` with the partial-sum ring fused in.
+
+    Per shard: ``x`` holds a column block [M, k], ``w`` a row block [k, c];
+    the full product is the sum over shards of ``x_j @ w_j``.  The
+    accumulator for output-row chunk ``b`` starts at shard ``b+1`` and walks
+    the ring forward, each shard adding its own contribution to that chunk
+    before passing it on, so chunk ``b`` lands fully-reduced on shard ``b``
+    after ``n-1`` hops.  Returns the local output-row chunk [M/n, c].
+    """
+    n = jax.lax.psum(1, axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    if x.shape[0] % n != 0:
+        raise ValueError(f"rows {x.shape[0]} not divisible by ring size {n}")
+    rows = x.shape[0] // n
+    perm = _ring_perm(n, forward=True)
+
+    def block(b: jax.Array) -> jax.Array:
+        xb = jax.lax.dynamic_slice(x, (b * rows, 0), (rows, x.shape[1]))
+        return jnp.dot(xb, w)
+
+    acc = block(jax.lax.rem(idx - 1 + n, n))
+    for i in range(1, n):
+        acc = jax.lax.ppermute(acc, axis_name, perm)
+        acc = acc + block(jax.lax.rem(idx - 1 - i + 2 * n, n))
+    return acc

@@ -1,0 +1,357 @@
+"""Logical-axis sharding: mesh context management + PartitionSpec factories.
+
+The models layer speaks *logical* axes ("batch", "seq", "model", "attn_seq");
+this module owns the mapping onto physical mesh axes.  Everything degrades to
+a no-op without an active mesh, so the same model code runs single-device
+smoke tests and 512-chip dry-runs unchanged (DESIGN.md §3).
+
+Key behaviours:
+
+* ``shard(x, *logical)`` applies ``with_sharding_constraint`` and silently
+  **drops** any logical axis whose mesh extent does not divide the dimension
+  (e.g. sequence-parallel residual streams when ``S % tp != 0``) or whose
+  mesh axes were already consumed by an earlier dimension.
+* ``param_pspecs(..., fsdp=True)`` adds ZeRO-3: on top of the tensor-parallel
+  rules, the largest still-replicated dimension of every leaf is sharded
+  over the ``data`` axis (moments included via ``state_pspecs``).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from contextvars import ContextVar
+from dataclasses import dataclass
+from typing import Any, Iterator, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "MeshCtx",
+    "use_mesh",
+    "mesh_context",
+    "shard",
+    "batch_axes",
+    "param_pspecs",
+    "state_pspecs",
+    "batch_pspecs",
+    "cache_pspecs",
+]
+
+# mesh axes that never carry the batch dimension (tensor/executor parallel)
+_NON_BATCH_AXES = frozenset({"model", "executor"})
+
+
+def batch_axes(mesh: Any, global_batch: int) -> tuple[str, ...]:
+    """Mesh axes the batch dimension shards over: every non-model axis, in
+    mesh order, as long as the running product still divides the batch
+    (``long_500k``'s B=1 legitimately returns ``()``)."""
+    out: list[str] = []
+    prod = 1
+    for a in mesh.axis_names:
+        if a in _NON_BATCH_AXES:
+            continue
+        size = mesh.shape[a]
+        if size > 1 and global_batch % (prod * size) == 0:
+            out.append(a)
+            prod *= size
+    return tuple(out)
+
+
+def _resolve(
+    logical: str | None, mesh: Any, batch: tuple[str, ...], seq: str | None
+) -> tuple[str, ...]:
+    """Logical axis name -> physical mesh axes (possibly empty)."""
+    if logical is None:
+        return ()
+    names = tuple(mesh.axis_names)
+    if logical == "batch":
+        return tuple(a for a in batch if a in names)
+    if logical == "seq":
+        return (seq,) if seq and seq in names else ()
+    if logical in ("model", "attn_seq"):
+        # attn_seq: independent q rows over the model axis (the MQA path)
+        return ("model",) if "model" in names else ()
+    if logical in names:
+        return (logical,)
+    return ()
+
+
+def _entry(axes: Sequence[str]) -> Any:
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def _build_spec(
+    shape: Sequence[int],
+    logical: Sequence[str | None],
+    mesh: Any,
+    batch: tuple[str, ...] = (),
+    seq: str | None = None,
+) -> P:
+    """Resolve a logical spec against concrete dims: per-dim, keep the
+    greedy prefix of mesh axes whose cumulative extent divides the dim and
+    that no earlier dim consumed."""
+    used: set[str] = set()
+    entries: list[Any] = []
+    for dim, l in zip(shape, logical):
+        keep: list[str] = []
+        prod = 1
+        for a in _resolve(l, mesh, batch, seq):
+            size = mesh.shape[a]
+            if a in used or size <= 0 or dim % (prod * size) != 0:
+                break
+            keep.append(a)
+            prod *= size
+        used.update(keep)
+        entries.append(_entry(keep))
+    return P(*entries)
+
+
+@dataclass(frozen=True)
+class MeshCtx:
+    """An activated mesh plus the logical->physical axis bindings for one
+    cell: which axes carry the batch, and whether the residual-stream
+    sequence dim is sharded (Megatron-SP)."""
+
+    mesh: Any
+    batch: tuple[str, ...] = ()
+    seq: str | None = None
+
+    def resolve(self, logical: str | None) -> tuple[str, ...]:
+        return _resolve(logical, self.mesh, tuple(self.batch), self.seq)
+
+    def extent(self, axes: str | Sequence[str] | None) -> int:
+        """Product of mesh extents for the given physical axes."""
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= int(self.mesh.shape[a])
+        return n
+
+    def pspec(self, shape: Sequence[int], logical: Sequence[str | None]) -> P:
+        return _build_spec(shape, logical, self.mesh, tuple(self.batch), self.seq)
+
+
+_CURRENT: ContextVar[MeshCtx | None] = ContextVar("repro_mesh_ctx", default=None)
+
+
+def mesh_context() -> MeshCtx | None:
+    """The active :class:`MeshCtx`, or None (single-device / smoke paths)."""
+    return _CURRENT.get()
+
+
+@contextmanager
+def use_mesh(ctx: MeshCtx | None) -> Iterator[MeshCtx | None]:
+    """Activate ``ctx`` for the dynamic extent (tracing included): every
+    ``shard`` call inside resolves against it."""
+    token = _CURRENT.set(ctx)
+    try:
+        yield ctx
+    finally:
+        _CURRENT.reset(token)
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names; no-op without an
+    active mesh.  One logical name (or None) per dimension."""
+    ctx = mesh_context()
+    if ctx is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"shard: {len(logical)} axes for rank-{x.ndim} array")
+    spec = ctx.pspec(x.shape, logical)
+    if all(e is None for e in spec):
+        return x  # fully replicated constraint would only pessimize GSPMD
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# PartitionSpec factories (the launch layer's acceptance contract)
+# ---------------------------------------------------------------------------
+
+# Tensor-parallel rules per *leaf name*: logical spec for the core (unstacked)
+# rank; scan-stacked leaves get a leading None via padding.  Megatron layout:
+# qkv/gate/up column-parallel, o/down row-parallel; embeddings vocab-sharded.
+_PARAM_RULES: dict[str, tuple[str | None, ...]] = {
+    # attention
+    "wq": (None, "model"),
+    "wk": (None, "model"),
+    "wv": (None, "model"),
+    "wo": ("model", None),
+    # dense GLU ffn
+    "w_gate": (None, "model"),
+    "w_up": (None, "model"),
+    "w_down": ("model", None),
+    # embeddings / unembedding
+    "embed": ("model", None),
+    "unembed": (None, "model"),
+    # mamba (channel dim d_inner over model)
+    "in_proj": (None, "model"),
+    "x_proj": ("model", None),
+    "dt_proj": (None, "model"),
+    "out_proj": ("model", None),
+    "A_log": ("model", None),
+    "D": ("model",),
+    "dt_bias": ("model",),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    # RG-LRU (width dim over model)
+    "w_y": (None, "model"),
+    "w_x": (None, "model"),
+    "w_r": (None, "model"),
+    "w_i": (None, "model"),
+    "w_o": ("model", None),
+    "lam": ("model",),
+    # router stays replicated (tiny, fp32, every shard routes)
+    "router": (None, None),
+}
+
+# MoE expert weights: [E, d, f] (+L) — experts ARE the executor groups
+# (DESIGN.md §5), sharded over the model axis.
+_MOE_RULES: dict[str, tuple[str | None, ...]] = {
+    "w_gate": ("model", None, None),
+    "w_up": ("model", None, None),
+    "w_down": ("model", None, None),
+}
+
+
+def _leaf_name(path: tuple) -> str:
+    for e in reversed(path):
+        if isinstance(e, jax.tree_util.DictKey):
+            return str(e.key)
+        if isinstance(e, jax.tree_util.GetAttrKey):
+            return str(e.name)
+    return ""
+
+
+def _shape_of(leaf: Any) -> tuple[int, ...]:
+    return tuple(leaf.shape) if hasattr(leaf, "shape") else ()
+
+
+def _fsdp_axis(mesh: Any) -> str | None:
+    names = tuple(mesh.axis_names)
+    if "data" in names:
+        return "data"
+    for a in names:
+        if a not in _NON_BATCH_AXES:
+            return a
+    return None
+
+
+def _param_rule(cfg: Any, name: str, rank: int) -> tuple[str | None, ...]:
+    rule = _PARAM_RULES.get(name)
+    if getattr(cfg, "n_experts", 0) and name in _MOE_RULES and rank >= 3:
+        rule = _MOE_RULES[name]
+    if rule is None or rank < len(rule):
+        return (None,) * rank
+    return (None,) * (rank - len(rule)) + rule
+
+
+def _apply_fsdp(shape: Sequence[int], spec: P, mesh: Any) -> P:
+    """ZeRO-3: shard the largest still-replicated dim over the data axis."""
+    axis = _fsdp_axis(mesh)
+    if axis is None:
+        return spec
+    extent = int(mesh.shape[axis])
+    if extent <= 1 or any(
+        axis in ((e,) if isinstance(e, str) else tuple(e or ()))
+        for e in spec
+    ):
+        return spec
+    best, best_size = -1, 0
+    for i, (dim, e) in enumerate(zip(shape, spec)):
+        if e is None and dim % extent == 0 and dim > best_size:
+            best, best_size = i, dim
+    if best < 0:
+        return spec
+    entries = list(spec)
+    entries[best] = axis
+    return P(*entries)
+
+
+def param_pspecs(cfg: Any, shapes: Any, mesh: Any, *, fsdp: bool = False) -> Any:
+    """PartitionSpec pytree mirroring a params (or train-state) pytree.
+
+    Tensor-parallel Megatron rules by leaf name; ``fsdp=True`` additionally
+    shards every leaf's largest replicated dim over ``data`` (ZeRO-3).
+    Indivisible dims stay replicated — the factories see concrete shapes, so
+    aggressive rules are safe.
+    """
+
+    def one(path: tuple, leaf: Any) -> P:
+        shape = _shape_of(leaf)
+        name = _leaf_name(path)
+        if name == "step":
+            return P()
+        spec = _build_spec(shape, _param_rule(cfg, name, len(shape)), mesh)
+        if fsdp:
+            spec = _apply_fsdp(shape, spec, mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+def state_pspecs(cfg: Any, state_shapes: Any, mesh: Any, *, fsdp: bool = False) -> Any:
+    """Specs for the train state ``{"params", "m", "v", "step"}`` — moments
+    inherit the parameter rules (fsdp shards them too: that's the ZeRO part),
+    ``step`` is replicated."""
+    return param_pspecs(cfg, state_shapes, mesh, fsdp=fsdp)
+
+
+def batch_pspecs(batch_shapes: Any, mesh: Any, global_batch: int) -> Any:
+    """Input batches: leading dim over the data axes, rest replicated."""
+    bt = batch_axes(mesh, global_batch)
+
+    def one(leaf: Any) -> P:
+        shape = _shape_of(leaf)
+        rule = ("batch",) + (None,) * max(0, len(shape) - 1)
+        return _build_spec(shape, rule[: len(shape)], mesh, bt)
+
+    return jax.tree.map(one, batch_shapes)
+
+
+# Cache rules by leaf name (core rank, i.e. without the scan-layer stack dim):
+# KV caches are *sequence*-sharded over the model axis so MQA archs scale too
+# (serve/step.py); recurrent state caches shard their channel dim.
+_CACHE_RULES: dict[str, tuple[str | None, ...]] = {
+    "k": ("batch", "model", None, None),
+    "v": ("batch", "model", None, None),
+    "pos": (None,),
+    # "h" is rank-dispatched in cache_pspecs (mamba rank-3 vs RG-LRU rank-2)
+    "conv": ("batch", None, "model"),
+    "enc": ("batch", None, None),
+}
+
+
+def cache_pspecs(cfg: Any, cache_shapes: Any, mesh: Any, global_batch: int) -> Any:
+    """Specs for a decode/prefill cache pytree (``transformer.init_cache``)."""
+    bt = batch_axes(mesh, global_batch)
+    stacked = bool(getattr(cfg, "scan_layers", False)) and bool(
+        getattr(cfg, "is_homogeneous", False)
+    )
+
+    def one(path: tuple, leaf: Any) -> P:
+        shape = _shape_of(leaf)
+        name = _leaf_name(path)
+        if name == "len":
+            return P()
+        under_layers = any(
+            isinstance(e, jax.tree_util.DictKey) and str(e.key) == "layers"
+            for e in path
+        )
+        pad = 1 if (stacked and under_layers) else 0
+        core = len(shape) - pad  # rank without the scan-layer stack dim
+        if name == "h":
+            # mamba state [B, d_inner, state] vs RG-LRU state [B, width]
+            rule = {2: ("batch", "model"), 3: ("batch", "model", None)}.get(core)
+        else:
+            rule = _CACHE_RULES.get(name)
+        if rule is None or core != len(rule):
+            return P(*([None] * len(shape)))
+        return _build_spec(shape, (None,) * pad + tuple(rule), mesh, bt)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)

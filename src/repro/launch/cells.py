@@ -14,7 +14,6 @@ from dataclasses import dataclass, field, replace
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import SHAPES, ModelConfig, ShapeSpec, get_config
@@ -84,8 +83,6 @@ def plan_for(
         return CellPlan(microbatches=1, seq_shard=False, remat=False)
     n_dev = mesh.devices.size
     tp = mesh.shape.get("model", 1)
-    from repro.dist.sharding import batch_axes
-
     dp = 1
     for a in batch_axes(mesh, shape.global_batch):
         dp *= mesh.shape[a]

@@ -23,8 +23,6 @@ import json
 import time
 import traceback
 
-import jax
-
 from repro.analysis.roofline import TPU_V5E, roofline_report
 from repro.configs.base import SHAPES, get_config, list_archs
 from repro.launch.cells import build_cell, skip_reason

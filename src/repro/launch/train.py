@@ -13,7 +13,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ShapeSpec, get_config

@@ -8,7 +8,6 @@ and matches the Pallas kernel's blocking (kernels/flash_attention).
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ a spec change, not a code change (param_pspecs/state_pspecs fsdp=True).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

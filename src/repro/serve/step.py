@@ -8,8 +8,6 @@ from __future__ import annotations
 
 from typing import Callable
 
-import jax
-
 from repro.configs.base import ModelConfig
 from repro.models import transformer
 

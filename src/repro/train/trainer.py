@@ -102,14 +102,20 @@ class Trainer:
 
         ewma: float | None = None
         while step < cfg.total_steps:
-            batch = self.batch_for_step(step)
+            # the timer covers batch fetch too: a slow host stalls its input
+            # pipeline as often as its compute, and both must trip the watchdog.
+            # Fetch errors are NOT node faults, though — a deterministic data
+            # bug must surface immediately, not burn max_restarts replays.
             t0 = time.perf_counter()
+            batch = self.batch_for_step(step)
             try:
                 if self.fault_hook is not None:
                     self.fault_hook(step)
                 new_state, metrics = self.step_fn(self.state, batch)
                 new_state = jax.block_until_ready(new_state)
             except Exception as e:  # noqa: BLE001 — any failure = node fault
+                if self.ckpt is None:
+                    raise  # no recovery point: surface the real error
                 report.restarts += 1
                 if report.restarts > cfg.max_restarts:
                     raise RuntimeError(

@@ -1,0 +1,82 @@
+"""Session bootstrap: src/ on sys.path (no PYTHONPATH=src needed), a forced
+8-device host platform so single-process dist tests see a real mesh, the
+``multidevice`` marker for the subprocess-based suite, and a graceful
+stand-in for ``hypothesis`` when the dev extra isn't installed."""
+import functools
+import os
+import sys
+import types
+
+# Must run before ANY jax import: the host device count locks at first init.
+# The subprocess tests (test_dist_multidevice.py) override this per-child.
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multidevice: subprocess-based multi-device tests (slow; spawn their own jax)",
+    )
+
+
+# ---------------------------------------------------------------------------
+# hypothesis stand-in: without the dev extra, property tests collect and SKIP
+# (instead of failing the whole module at import); plain tests still run.
+# ---------------------------------------------------------------------------
+
+def _install_hypothesis_stub() -> None:
+    import pytest
+
+    reason = "hypothesis not installed (pip install -e .[dev])"
+
+    class _Strategy:
+        def __repr__(self):
+            return "<hypothesis stub strategy>"
+
+    def _strategy(*_a, **_k):
+        return _Strategy()
+
+    def composite(fn):
+        @functools.wraps(fn)
+        def build(*_a, **_k):
+            return _Strategy()  # never drawn from: @given tests are skipped
+
+        return build
+
+    def given(*_a, **_k):
+        def deco(fn):
+            @pytest.mark.skip(reason=reason)
+            @functools.wraps(fn)
+            def wrapper():
+                pass
+
+            return wrapper
+
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = lambda *_a, **_k: True
+    st = types.ModuleType("hypothesis.strategies")
+    st.composite = composite
+    st.__getattr__ = lambda name: _strategy  # integers/floats/sampled_from/...
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:
+    import hypothesis  # noqa: F401  (the real one, when installed)
+except ImportError:
+    _install_hypothesis_stub()

@@ -1,12 +1,10 @@
 """HLO cost walker + roofline: validated against known-flop probes."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.analysis.hlo_cost import module_cost, parse_computations, top_traffic
 from repro.analysis.hlo_collectives import collective_summary
-from repro.analysis.roofline import TPU_V5E, roofline_report
+from repro.analysis.roofline import roofline_report
 
 
 def _compile(fn, *specs):

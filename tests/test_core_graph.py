@@ -3,7 +3,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import Graph, GraphValidationError, OpNode
+from repro.core import Graph, GraphValidationError
 
 
 def diamond() -> Graph:

@@ -14,7 +14,6 @@ from repro.core import (
     SimConfig,
     diagonals,
     enumerate_symmetric_configs,
-    graph_costs,
     is_wavefront_order,
     make_schedule,
     op_saturation_point,

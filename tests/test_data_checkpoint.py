@@ -1,7 +1,6 @@
 """Data pipeline determinism/sharding + checkpoint atomicity/restore."""
 import os
 import tempfile
-import threading
 
 import jax.numpy as jnp
 import numpy as np

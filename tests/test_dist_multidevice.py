@@ -8,6 +8,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.multidevice  # subprocess-based: each test re-inits jax
+
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

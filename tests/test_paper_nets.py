@@ -1,7 +1,7 @@
 """Paper-network graph builders: structure, sizes, wavefront metadata."""
 import pytest
 
-from repro.core import KNL7250, GraphiEngine, is_wavefront_order, simulate, SimConfig
+from repro.core import KNL7250, simulate, SimConfig
 from repro.models.paper_nets import (
     PAPER_NETS,
     PAPER_SIZES,

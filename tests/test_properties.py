@@ -2,7 +2,6 @@
 simulator conservation laws, slot legality, optimizer sanity."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -11,7 +10,6 @@ from repro.core import (
     Graph,
     OpNode,
     SimConfig,
-    graph_costs,
     make_schedule,
     simulate,
     slot_assignment,

@@ -5,13 +5,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager
-from repro.configs.base import ShapeSpec, get_config
+from repro.configs.base import get_config
 from repro.data import DataConfig, SyntheticTokens
-from repro.models import api as model_api
 from repro.train.step import TrainStepConfig, init_train_state, make_train_step
 from repro.train.trainer import Trainer, TrainerConfig
 
