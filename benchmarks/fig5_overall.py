@@ -17,7 +17,8 @@ Paper band: Graphi 2.1x-9.5x faster than TF across 4 nets x 3 sizes
 """
 from __future__ import annotations
 
-from repro.core import KNL7250, GraphiEngine, SimConfig, interference_multiplier, simulate
+from repro import api
+from repro.core import KNL7250, SimConfig, interference_multiplier, simulate
 from repro.models.paper_nets import PAPER_NETS, paper_graph
 from .common import Row, check_band
 
@@ -36,9 +37,8 @@ def run() -> list[Row]:
     for net in PAPER_NETS:
         for size in ("small", "medium", "large"):
             g = paper_graph(net, size)
-            eng = GraphiEngine(g, KNL7250)
-            prof = eng.profile()
-            n, k = prof.best_config
+            exe = api.compile(g, hw=KNL7250, backend="sim")
+            n, k = exe.profile.best_config
             graphi = simulate(g, KNL7250, SimConfig(n_executors=n, team_size=k, policy="cpf"))
             # TF-like: same best parallelism (TF also runs ops concurrently),
             # naive policy + interference + primitive factor

@@ -2,7 +2,7 @@
 TPU translation.  ``python -m benchmarks.run [--only fig5] [--csv out.csv]``.
 
 Every row carries its provenance ([measured] on this CPU vs [model:KNL] /
-[model:v5e] cost-model replay — see DESIGN.md §4) and, where the paper
+[model:v5e] cost-model replay — see DESIGN.md §5) and, where the paper
 publishes a number, a PASS/WARN band check.
 """
 from __future__ import annotations

@@ -17,9 +17,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import api as graphi
 from repro.core import (
     TPUV5E,
-    GraphiEngine,
     SimConfig,
     is_wavefront_order,
     recurrence_graph,
@@ -40,8 +40,8 @@ def run() -> list[Row]:
     byts = (2 * B * H + 2 * H * 4 * H) * 2
     g = recurrence_graph(L, T, flops_per_cell=flops, bytes_per_cell=byts)
 
-    eng = GraphiEngine(g, TPUV5E, n_workers=64, reserved_workers=0)
-    prof = eng.profile()
+    exe = graphi.compile(g, hw=TPUV5E, backend="sim", n_workers=64, reserved_workers=0)
+    prof = exe.profile
     sched = simulate(g, TPUV5E, SimConfig(n_executors=prof.best_n_executors,
                                           team_size=prof.best_team_size))
     order = sched.start_order()

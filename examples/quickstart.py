@@ -1,65 +1,58 @@
-"""Quickstart: the Graphi engine on a toy computation graph.
+"""Quickstart: ``repro.compile`` — any JAX function becomes a scheduled
+Graphi graph.
 
-Builds a small diamond-shaped DAG of real jnp ops, profiles it, produces
-the critical-path-first schedule, executes it with the host runtime
-(centralized scheduler + per-executor buffers), and checks the result
-against the sequential interpreter.
+Writes a plain JAX function (four parallel GEMM branches + a combine),
+captures it into an operator DAG (one ``compile`` call — no hand-built
+graph), inspects the profile / critical-path-first schedule, executes it
+with the host runtime (centralized scheduler + per-executor buffers), and
+checks the result against calling the function directly.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import KNL7250, Graph, GraphiEngine, OpNode, ascii_timeline
+import repro
+from repro.core import ascii_timeline
 
 
-def build_graph() -> Graph:
-    g = Graph("quickstart")
-    D = 256
-    g.add(OpNode("x", bytes_out=D * D * 4))               # input
-    for i in range(4):                                    # 4 parallel branches
-        g.add(OpNode(
-            f"gemm{i}", kind="gemm", deps=("x",),
-            flops=2 * D ** 3, bytes_in=2 * D * D * 4, bytes_out=D * D * 4,
-            meta={"rows": D},
-            fn=lambda a, i=i: jnp.tanh(a @ (a.T * (0.1 * (i + 1)))),
-        ))
-    g.add(OpNode(
-        "combine", kind="elementwise", deps=tuple(f"gemm{i}" for i in range(4)),
-        flops=4 * D * D, bytes_in=4 * D * D * 4, bytes_out=D * D * 4,
-        fn=lambda *xs: sum(xs),
-    ))
-    g.add(OpNode(
-        "loss", kind="elementwise", deps=("combine",),
-        flops=D * D, bytes_in=D * D * 4, bytes_out=4,
-        fn=lambda a: jnp.sum(a * a),
-    ))
-    return g
+def f(x, w):
+    """4 independent branches -> combine -> scalar loss (width-4 DAG)."""
+    branches = [jnp.tanh(x @ (w * (0.1 * (i + 1)))) for i in range(4)]
+    y = sum(branches)
+    return jnp.sum(y * y)
 
 
 def main() -> None:
-    g = build_graph()
-    print(f"graph: {g}")
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
 
-    engine = GraphiEngine(g, KNL7250)
-    prof = engine.profile()
+    exe = repro.compile(f, x, w, hw=repro.KNL7250)
+    g = exe.graph
+    print(f"captured: {g}")
+    print(f"nodes: {g.names}")
+
+    prof = exe.profile
     print(f"profiler: best config = {prof.best_n_executors} executors "
           f"x {prof.best_team_size} cores, makespan {prof.best_makespan*1e6:.1f} us")
 
-    sched = engine.schedule()
-    print(f"CPF schedule (modelled):")
+    sched = exe.schedule
+    print("CPF schedule (modelled):")
     print(ascii_timeline(
         [type("E", (), {"op": n, "executor": e, "start": s, "end": t})()
          for n, (e, s, t) in sched.placements.items()],
         sched.n_executors, width=72,
     ))
+    cp_len, cp = exe.critical_path
+    print(f"critical path ({cp_len*1e6:.1f} us): {' -> '.join(cp)}")
 
-    x = jnp.asarray(np.random.default_rng(0).normal(size=(256, 256)), jnp.float32)
-    host = engine.execute_host({"x": x})
-    ref = g.execute({"x": x})
-    err = float(jnp.abs(host.outputs["loss"] - ref["loss"]))
-    print(f"host parallel run == sequential interpreter: err={err:.2e} "
-          f"({'OK' if err < 1e-3 else 'MISMATCH'})")
+    out = exe(x, w)                       # host backend: real parallel run
+    ref = f(x, w)                         # uncompiled JAX
+    err = float(jnp.abs(out - ref))
+    used = len({e.executor for e in exe.last_run.trace})
+    print(f"host parallel run == direct call: err={err:.2e} "
+          f"({'OK' if err < 1e-3 else 'MISMATCH'}), {used} executors used")
 
 
 if __name__ == "__main__":

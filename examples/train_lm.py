@@ -16,10 +16,15 @@ import math
 import jax
 
 from repro.checkpoint import CheckpointManager
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, ShapeSpec
 from repro.data import DataConfig, SyntheticTokens
 from repro.optim.adamw import AdamWConfig
-from repro.train.step import TrainStepConfig, init_train_state, make_train_step
+from repro.train.step import (
+    TrainStepConfig,
+    compile_lm_loss,
+    init_train_state,
+    make_train_step,
+)
 from repro.train.trainer import Trainer, TrainerConfig
 
 
@@ -60,6 +65,15 @@ def main() -> None:
     state = init_train_state(cfg, jax.random.key(0), tcfg.adamw)
     step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
 
+    # Graphi view of the same loss: capture -> profile -> CPF schedule gives
+    # the modelled per-step makespan the trainer reports next to wall-clock
+    shape = ShapeSpec("train_lm", args.seq, args.batch, "train")
+    exe = compile_lm_loss(cfg, shape, backend="sim")
+    ms = exe.schedule.makespan
+    print(f"graphi: loss graph {len(exe.graph)} nodes, width {exe.graph.width()}, "
+          f"{exe.schedule.n_executors}x{exe.schedule.team_size} executors, "
+          f"scheduled makespan {ms*1e3:.2f} ms (model: {exe.hw.name})")
+
     data = SyntheticTokens(DataConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
         kind="bigram", bigram_noise=0.15,
@@ -70,6 +84,7 @@ def main() -> None:
                       checkpoint_every=max(20, args.steps // 4),
                       log_every=max(5, args.steps // 20)),
         checkpoint=CheckpointManager(args.ckpt_dir, keep=2),
+        scheduled_makespan=ms,
     )
     report = trainer.run()
 

@@ -17,9 +17,9 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import api as graphi
 from repro.core import (
     TPUV5E,
-    GraphiEngine,
     ascii_timeline,
     diagonals,
     is_wavefront_order,
@@ -36,9 +36,9 @@ def main() -> None:
     g = recurrence_graph(L, T, flops_per_cell=flops, bytes_per_cell=3 * B * H * 4)
     print(f"recurrence DAG: {L} layers x {T} steps, width={g.width()}")
 
-    engine = GraphiEngine(g, TPUV5E, n_workers=L, reserved_workers=0)
-    engine.profile(extra_configs=[(L, 1)])
-    sched = engine.schedule()
+    exe = graphi.compile(g, hw=TPUV5E, backend="sim", n_workers=L, reserved_workers=0)
+    exe.profile_with(extra_configs=[(L, 1)])
+    sched = exe.schedule
     order = sched.start_order()
     ok = is_wavefront_order(order, g)
     print(f"CPF start order follows anti-diagonals: {ok}")

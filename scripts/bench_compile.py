@@ -1,0 +1,126 @@
+"""Perf smoke for the ``repro.compile`` path (CI artifact: BENCH_compile.json).
+
+Two legs:
+
+1. **Paper nets** — compile each of the four Table-1 networks (small size),
+   recording compile wall-clock (profile + CPF schedule), node count, best
+   executor config, simulated makespan, and the speedup over the
+   one-executor sequential baseline (all on the KNL cost model).
+2. **Captured model** — capture a tiny transformer ``lm_loss`` into a
+   graph, run it through the host runtime, and record capture wall-clock,
+   host-run wall-clock vs the direct (uncompiled) call, and the numeric
+   parity error.
+
+    PYTHONPATH=src python scripts/bench_compile.py [--out BENCH_compile.json]
+"""
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core import KNL7250, sequential_makespan
+from repro.models import api as model_api
+from repro.models import transformer
+from repro.models.paper_nets import PAPER_NETS, paper_graph
+from repro.train.step import lm_loss_fn
+
+
+def bench_paper_nets() -> list[dict]:
+    rows = []
+    for net in PAPER_NETS:
+        g = paper_graph(net, "small")
+        t0 = time.perf_counter()
+        exe = repro.compile(g, hw=KNL7250, backend="sim")
+        sched = exe.schedule                      # forces profile + schedule
+        compile_s = time.perf_counter() - t0
+        seq = sequential_makespan(KNL7250, g, sched.team_size)
+        rows.append({
+            "bench": "paper_net",
+            "name": f"{net}_small",
+            "n_nodes": len(g),
+            "width": g.width(),
+            "compile_wall_s": round(compile_s, 4),
+            "n_executors": sched.n_executors,
+            "team_size": sched.team_size,
+            "sim_makespan_s": sched.makespan,
+            "sequential_s": seq,
+            "speedup_x": round(seq / sched.makespan, 3) if sched.makespan else None,
+        })
+    return rows
+
+
+def bench_captured_loss() -> dict:
+    cfg = ModelConfig(
+        name="bench-tiny", family="dense", n_layers=2, d_model=64, n_heads=2,
+        n_kv_heads=1, d_ff=128, vocab_size=256, act="silu",
+        scan_layers=False, dtype=jnp.float32,
+    )
+    shape = ShapeSpec("bench", 32, 2, "train")
+    params = transformer.init_params(cfg, jax.random.key(0))
+    batch = model_api.make_batch(cfg, shape, jax.random.key(1))
+    fn = lm_loss_fn(cfg)
+
+    t0 = time.perf_counter()
+    exe = repro.compile(fn, params, batch, backend="host")
+    _ = exe.schedule
+    capture_s = time.perf_counter() - t0
+
+    ref = fn(params, batch)
+    jax.block_until_ready(ref)
+    t0 = time.perf_counter()
+    ref = jax.block_until_ready(fn(params, batch))
+    direct_s = time.perf_counter() - t0
+
+    out = exe(params, batch)                      # warm the host path
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(exe(params, batch))
+    host_s = time.perf_counter() - t0
+
+    return {
+        "bench": "captured_lm_loss",
+        "name": cfg.name,
+        "n_nodes": len(exe.graph),
+        "width": exe.graph.width(),
+        "capture_wall_s": round(capture_s, 4),
+        "host_run_wall_s": round(host_s, 4),
+        "direct_call_wall_s": round(direct_s, 4),
+        "executors_used": len({e.executor for e in exe.last_run.trace}),
+        "host_makespan_s": exe.last_run.makespan,
+        "sim_makespan_s": exe.schedule.makespan,
+        "parity_abs_err": float(abs(np.asarray(out) - np.asarray(ref))),
+    }
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="BENCH_compile.json")
+    args = p.parse_args()
+
+    t0 = time.time()
+    rows = bench_paper_nets()
+    rows.append(bench_captured_loss())
+    payload = {"total_wall_s": round(time.time() - t0, 2), "rows": rows}
+
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    for r in rows:
+        keys = [k for k in ("compile_wall_s", "capture_wall_s", "sim_makespan_s",
+                            "speedup_x", "parity_abs_err") if k in r and r[k] is not None]
+        print(f"{r['bench']:16s} {r['name']:20s} n={r['n_nodes']:4d} "
+              + " ".join(f"{k}={r[k]:.4g}" for k in keys))
+    print(f"wrote {args.out} ({payload['total_wall_s']}s)")
+
+    # smoke gates: parity must hold and every compile must have finished
+    cap = rows[-1]
+    assert cap["parity_abs_err"] < 1e-4, cap
+    assert all(r["sim_makespan_s"] > 0 for r in rows)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

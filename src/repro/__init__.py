@@ -1,0 +1,50 @@
+"""Graphi reproduction: scheduling computation graphs of deep-learning
+models, grown onto JAX/Pallas SPMD meshes.
+
+Public surface (lazily resolved so ``import repro`` stays cheap and never
+imports jax before entry points set their ``XLA_FLAGS``)::
+
+    import repro
+    exe = repro.compile(fn, *specs, hw=repro.KNL7250)   # capture->plan->run
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    # the redesigned public API (repro.api)
+    "compile": "repro.api",
+    "Executable": "repro.api",
+    # capture + graph IR
+    "capture": "repro.core.capture",
+    "CapturedGraph": "repro.core.capture",
+    "Graph": "repro.core.graph",
+    "OpNode": "repro.core.graph",
+    "GraphValidationError": "repro.core.graph",
+    # hardware models + planning artifacts
+    "HardwareModel": "repro.core.cost_model",
+    "KNL7250": "repro.core.cost_model",
+    "TPUV5E": "repro.core.cost_model",
+    "ProfileResult": "repro.core.profiler",
+    "Schedule": "repro.core.scheduler",
+    "SimConfig": "repro.core.simulate",
+    "SimResult": "repro.core.simulate",
+    "simulate": "repro.core.simulate",
+    # runtimes (GraphiEngine is deprecated; kept for pre-redesign callers)
+    "HostScheduler": "repro.core.engine",
+    "HostRunResult": "repro.core.engine",
+    "GraphiEngine": "repro.core.engine",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__() -> list[str]:
+    return sorted(set(globals()) | set(__all__))

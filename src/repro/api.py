@@ -1,0 +1,308 @@
+"""``graphi.compile()`` — one capture → profile → plan → execute API.
+
+The paper's Fig-4 pipeline as an object model::
+
+    import repro
+    exe = repro.compile(loss_fn, params_spec, batch_spec, hw=repro.KNL7250)
+    exe.graph            # the captured OpNode DAG
+    exe.profile          # best (n_executors, team_size) + per-op cost table
+    exe.schedule         # frozen critical-path-first schedule
+    exe.critical_path    # (length_s, [op, ...])
+    out = exe(params, batch)   # dispatch through the chosen backend
+
+``compile`` accepts either a JAX callable plus input specs (captured via
+``core.capture``) or an already-built :class:`~repro.core.graph.Graph`
+(the paper nets).  All planning artifacts are lazy, cached properties;
+``Executable`` is the one handle the rest of the stack (launch, train,
+benchmarks, examples) talks to.  ``core.engine.GraphiEngine`` survives only
+as a deprecated shim over this module.
+
+Backends
+--------
+* ``"host"`` — the paper-faithful dynamic runtime (:class:`HostScheduler`):
+  real execution on executor threads, returns ``fn``'s output pytree.
+* ``"sim"``  — cost-model replay only; calling the executable returns the
+  :class:`SimResult` (no numerics — the only callable backend for stat-only
+  graphs such as the paper nets).
+* ``"mesh"`` — freezes the CPF schedule into barrier slots bound to
+  disjoint executor sub-meshes (``repro.dist.executor_mesh``) and executes
+  slot-by-slot (reference semantics on this box).
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+from repro.core.capture import CapturedGraph, capture
+from repro.core.cost_model import KNL7250, HardwareModel, sequential_makespan
+from repro.core.engine import HostRunResult, HostScheduler
+from repro.core.graph import Graph
+from repro.core.profiler import ProfileResult, profile
+from repro.core.scheduler import Schedule, make_schedule, slot_assignment
+from repro.core.simulate import SimConfig, SimResult, simulate
+
+__all__ = ["Executable", "compile"]
+
+_BACKENDS = ("host", "sim", "mesh")
+
+
+class Executable:
+    """A scheduled computation graph: callable, introspectable, lazy.
+
+    Planning artifacts (``profile`` → ``schedule`` → ``slots``) are computed
+    on first access and cached; mutating knobs after first use is not
+    supported — recompile instead.
+    """
+
+    def __init__(
+        self,
+        graph: Graph,
+        hw: HardwareModel,
+        *,
+        captured: CapturedGraph | None = None,
+        backend: str = "host",
+        policy: str = "cpf",
+        n_workers: int | None = None,
+        reserved_workers: int = 2,
+        n_executors: int | None = None,
+        team_size: int | None = None,
+        mesh: Any = None,
+    ):
+        if backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
+        self._graph = graph
+        self.hw = hw
+        self.captured = captured
+        self.backend = backend
+        self.policy = policy
+        self.n_workers = n_workers
+        self.reserved_workers = reserved_workers
+        self._pin = (n_executors, team_size)
+        self.mesh = mesh
+        self._profile: ProfileResult | None = None
+        self._schedule: Schedule | None = None
+        self._slots: list[list[str]] | None = None
+        self._plan: Any = None
+        self.last_run: HostRunResult | SimResult | None = None
+        self.last_plan: Any = None
+
+    # -- introspection (the .lower()-style surface) -------------------------
+    @property
+    def graph(self) -> Graph:
+        return self._graph
+
+    @property
+    def usable_workers(self) -> int:
+        n = self.n_workers if self.n_workers is not None else self.hw.n_workers
+        return max(1, n - self.reserved_workers)
+
+    @property
+    def profile(self) -> ProfileResult:
+        if self._profile is None:
+            self._profile = profile(
+                self._graph, self.hw, n_workers=self.usable_workers, policy=self.policy
+            )
+        return self._profile
+
+    def profile_with(self, **kw: Any) -> ProfileResult:
+        """Re-run the configuration search with profiler kwargs
+        (``extra_configs=``, ``measured_costs=``, ...) and cache the result."""
+        self._profile = profile(
+            self._graph, self.hw, n_workers=self.usable_workers, policy=self.policy, **kw
+        )
+        self._schedule = None
+        self._slots = None
+        return self._profile
+
+    @property
+    def schedule(self) -> Schedule:
+        if self._schedule is None:
+            self._schedule = self.schedule_for(self.policy)
+        return self._schedule
+
+    def schedule_for(self, policy: str) -> Schedule:
+        n_exec, team = self._pin
+        if n_exec is None or team is None:
+            p = self.profile
+            n_exec = n_exec or p.best_n_executors
+            team = team or p.best_team_size
+        return make_schedule(
+            self._graph, self.hw, n_executors=n_exec, team_size=team, policy=policy
+        )
+
+    @property
+    def slots(self) -> list[list[str]]:
+        """Barrier-slot structure of the frozen schedule (static plan)."""
+        if self._slots is None:
+            self._slots = slot_assignment(self._graph, self.schedule)
+        return self._slots
+
+    @property
+    def critical_path(self) -> tuple[float, list[str]]:
+        return self._graph.critical_path(self.schedule.op_costs)
+
+    def simulate(self, **kw: Any) -> SimResult:
+        p = self.profile
+        cfg = SimConfig(
+            n_executors=kw.pop("n_executors", self._pin[0] or p.best_n_executors),
+            team_size=kw.pop("team_size", self._pin[1] or p.best_team_size),
+            policy=kw.pop("policy", self.policy),
+            **kw,
+        )
+        return simulate(self._graph, self.hw, cfg, costs=p.op_costs)
+
+    def static_plan(self, mesh: Any = None, *, axis: str | None = None):
+        """Bind the frozen schedule to disjoint executor sub-meshes.
+
+        The default-argument plan (the compile-time mesh) is cached like
+        every other planning artifact; passing an explicit mesh/axis
+        recomputes for that binding.
+        """
+        from repro.dist.executor_mesh import plan_from_schedule
+
+        is_default = mesh is None and axis is None
+        if is_default and self._plan is not None:
+            return self._plan
+        mesh = mesh if mesh is not None else self.mesh
+        if mesh is None:
+            raise ValueError("static_plan needs a mesh (pass one or compile(mesh=...))")
+        plan = plan_from_schedule(self._graph, self.schedule, mesh, axis=axis)
+        if is_default:
+            self._plan = plan
+        return plan
+
+    def describe(self) -> str:
+        g = self._graph
+        sched = self.schedule
+        cp_len, cp = self.critical_path
+        seq = sequential_makespan(self.hw, g, sched.team_size)
+        return (
+            f"Executable({g.name!r}, backend={self.backend!r}, hw={self.hw.name})\n"
+            f"  nodes={len(g)} width={g.width()} flops={g.total_flops():.3g}\n"
+            f"  config: {sched.n_executors} executors x {sched.team_size} workers "
+            f"({self.policy})\n"
+            f"  makespan={sched.makespan:.3e}s sequential={seq:.3e}s "
+            f"speedup={seq / sched.makespan if sched.makespan else 0.0:.2f}x\n"
+            f"  critical path ({cp_len:.3e}s, {len(cp)} ops): "
+            f"{' -> '.join(cp[:6])}{' ...' if len(cp) > 6 else ''}"
+        )
+
+    # -- execution ----------------------------------------------------------
+    def _host_executors(self, n_executors: int | None = None) -> int:
+        explicit = n_executors if n_executors is not None else self._pin[0]
+        if explicit is not None:
+            n = explicit
+        else:
+            n = self.profile.best_n_executors
+            # the modelled best config may be one wide executor (team-size
+            # trade-off); executor *threads* have no team dimension, so the
+            # profiled default always exploits available DAG width — an
+            # explicitly requested count is honored as-is
+            if self._graph.width() >= 2:
+                n = max(n, 2)
+        return min(n, max(1, len(self._graph)))
+
+    def execute_host(
+        self, inputs: Mapping[str, Any] | None = None, n_executors: int | None = None
+    ) -> HostRunResult:
+        """Run the dynamic host runtime on a name→value input mapping."""
+        host = HostScheduler(
+            self._graph,
+            self._host_executors(n_executors),
+            costs=self.schedule.op_costs or None,
+        )
+        res = host.run(inputs)
+        self.last_run = res
+        return res
+
+    def __call__(self, *args: Any) -> Any:
+        if self.backend == "sim":
+            self.last_run = self.simulate()
+            return self.last_run
+        if self.captured is None:
+            # raw-graph executables take a single name→value mapping
+            inputs: Mapping[str, Any] | None = args[0] if args else None
+        else:
+            inputs = self.captured.bind(args)
+        if self.backend == "host":
+            res = self.execute_host(inputs)
+            results = res.outputs
+        else:
+            results = self._run_static(inputs)
+        if self.captured is None:
+            return results
+        return self.captured.unflatten(results)
+
+    def _run_static(self, inputs: Mapping[str, Any] | None) -> dict[str, Any]:
+        """mesh backend: execute the static plan slot-by-slot (barrier
+        semantics; per-slot lanes are independent — reference execution on
+        this box)."""
+        plan = self.static_plan()
+        inputs = dict(inputs or {})
+        g = self._graph
+        results: dict[str, Any] = {}
+        for slot in plan.slots:
+            for op in slot:
+                node = g[op]
+                if not node.deps and op in inputs and node.fn is None:
+                    results[op] = inputs[op]
+                elif node.fn is None:
+                    raise ValueError(f"node {op!r} has no fn and no input")
+                else:
+                    results[op] = node.fn(*[results[d] for d in node.deps])
+        self.last_plan = plan
+        return results
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"Executable({self._graph.name!r}, backend={self.backend!r}, "
+            f"hw={self.hw.name}, n={len(self._graph)})"
+        )
+
+
+def compile(
+    target: Any,
+    *specs: Any,
+    hw: HardwareModel = KNL7250,
+    backend: str = "host",
+    name: str | None = None,
+    policy: str = "cpf",
+    n_workers: int | None = None,
+    reserved_workers: int = 2,
+    n_executors: int | None = None,
+    team_size: int | None = None,
+    fuse: bool = True,
+    mesh: Any = None,
+) -> Executable:
+    """Turn a JAX function (or a pre-built :class:`Graph`) into a scheduled
+    :class:`Executable`.
+
+    ``specs`` are the function's example inputs — concrete arrays or
+    ``jax.ShapeDtypeStruct`` pytrees (capture reads shapes/dtypes only).
+    ``n_executors``/``team_size`` pin the executor configuration instead of
+    profiling for the best one.
+    """
+    captured: CapturedGraph | None = None
+    if isinstance(target, CapturedGraph):
+        if specs:
+            raise TypeError("compile(captured_graph) takes no input specs "
+                            "(they were fixed at capture time)")
+        captured, graph = target, target.graph
+    elif isinstance(target, Graph):
+        if specs:
+            raise TypeError("compile(graph) takes no input specs")
+        graph = target
+    else:
+        captured = capture(target, *specs, name=name, fuse=fuse)
+        graph = captured.graph
+    return Executable(
+        graph,
+        hw,
+        captured=captured,
+        backend=backend,
+        policy=policy,
+        n_workers=n_workers,
+        reserved_workers=reserved_workers,
+        n_executors=n_executors,
+        team_size=team_size,
+        mesh=mesh,
+    )

@@ -1,6 +1,6 @@
 """recurrentgemma-2b [hybrid] — arXiv:2402.19427 (Griffin). RG-LRU recurrent
 blocks + local (sliding-window) MQA, pattern 2 recurrent : 1 attention.
-head_dim=256, GeGLU. The flagship wavefront-scheduling arch (DESIGN §5)."""
+head_dim=256, GeGLU. The flagship wavefront-scheduling arch (DESIGN §6)."""
 from repro.configs.base import ModelConfig
 
 CONFIG = ModelConfig(

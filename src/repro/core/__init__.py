@@ -2,6 +2,7 @@
 
 Public API re-exports.
 """
+from .capture import CapturedGraph, capture
 from .cost_model import (
     KNL7250,
     TPUV5E,
@@ -30,11 +31,13 @@ from .wavefront import (
 __all__ = [
     "KNL7250",
     "TPUV5E",
+    "CapturedGraph",
     "HardwareModel",
     "Graph",
     "GraphValidationError",
     "OpNode",
     "GraphiEngine",
+    "capture",
     "HostRunResult",
     "HostScheduler",
     "ProfileResult",

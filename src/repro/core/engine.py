@@ -1,34 +1,37 @@
-"""GraphiEngine — the paper's execution engine, end to end.
-
-Two runtimes sit behind one facade:
+"""Host runtime + the deprecated ``GraphiEngine`` facade.
 
 * :class:`HostScheduler` — the **paper-faithful dynamic runtime**: a
   centralized scheduler (runs on the client thread, §5.2) with critical-path-
-  first priority, per-executor operation buffers (depth 1), executor worker
-  threads, and a triggered-operation return queue. On a multi-device system
-  each executor owns a device group; on this box it demonstrates exact
-  scheduling semantics and is validated against the sequential interpreter.
+  first priority, per-executor operation buffers (depth ``buffer_depth``),
+  executor worker threads, and a triggered-operation return queue.  On a
+  multi-device system each executor owns a device group; on this box it
+  demonstrates exact scheduling semantics and is validated against the
+  sequential interpreter.
 
-* **Static plan** (:func:`Schedule` → :func:`slot_assignment`) — the
-  TPU-native path: the CPF schedule is frozen into barrier slots whose ops
-  are stacked/sharded over disjoint sub-meshes (see core/wavefront.py and
-  DESIGN.md §2.1).
+* :class:`GraphiEngine` — **deprecated**: the original five-call stateful
+  facade (profile / schedule / static_slots / simulate / execute_host), now
+  a thin shim over :class:`repro.api.Executable`.  New code should call
+  ``repro.api.compile`` (see DESIGN.md §3).
 """
 from __future__ import annotations
 
+import heapq
 import queue
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Mapping
 
 from .cost_model import HardwareModel
 from .graph import Graph
-from .profiler import ProfileResult, profile
-from .scheduler import Schedule, make_schedule, slot_assignment
-from .simulate import SimConfig, SimResult, TraceEvent, simulate
+from .profiler import ProfileResult
+from .scheduler import Schedule
+from .simulate import SimResult, TraceEvent
 
 __all__ = ["GraphiEngine", "HostScheduler", "HostRunResult"]
+
+_ERR = object()   # triggered-queue sentinel: an executor relayed an exception
 
 
 @dataclass
@@ -36,6 +39,7 @@ class HostRunResult:
     outputs: dict[str, Any]
     trace: list[TraceEvent]
     makespan: float
+    peak_inflight: int = 1      # max ops queued on one executor (buffer use)
 
 
 class HostScheduler:
@@ -43,7 +47,9 @@ class HostScheduler:
 
     Executors poll *their own* buffer (no shared global queue — the paper's
     contention fix); on completion they push (op, result) onto the triggered
-    queue, which the scheduler drains (Algorithm 1/2).
+    queue, which the scheduler drains (Algorithm 1/2).  Each executor buffer
+    holds up to ``buffer_depth`` dispatched ops, so an executor finishing one
+    op can start the next without a scheduler round-trip.
     """
 
     def __init__(
@@ -54,6 +60,10 @@ class HostScheduler:
         costs: Mapping[str, float] | None = None,
         buffer_depth: int = 1,
     ):
+        if n_executors < 1:
+            raise ValueError(f"need >= 1 executor, got {n_executors}")
+        if buffer_depth < 1:
+            raise ValueError(f"need buffer_depth >= 1, got {buffer_depth}")
         self.graph = graph
         self.n_executors = n_executors
         costs = costs or {n: max(g.flops, 1.0) for n, g in zip(graph.names, graph.nodes)}
@@ -67,16 +77,18 @@ class HostScheduler:
         indeg = {n: g.in_degree(n) for n in g.names}
         seq = {n: i for i, n in enumerate(g.names)}
 
-        import heapq
-
         ready: list[tuple[float, int, str]] = []
         for n in g.names:
             if indeg[n] == 0:
                 heapq.heappush(ready, (-self.levels[n], seq[n], n))
 
-        buffers = [queue.Queue(maxsize=self.buffer_depth) for _ in range(self.n_executors)]
+        n_exec = self.n_executors
+        # depth is enforced by the inflight counters, so the queues stay
+        # unbounded — shutdown puts never block on a full buffer
+        buffers = [queue.Queue() for _ in range(n_exec)]
         triggered: queue.Queue = queue.Queue()
-        idle = [True] * self.n_executors
+        inflight = [0] * n_exec
+        peak_inflight = 0
         trace: list[TraceEvent] = []
         t_origin = time.perf_counter()
 
@@ -88,45 +100,71 @@ class HostScheduler:
                 name, args = item
                 node = g[name]
                 t0 = time.perf_counter() - t_origin
-                if node.fn is None:
-                    out = inputs[name]
-                else:
-                    out = node.fn(*args)
+                try:
+                    if node.fn is None:
+                        out = inputs[name]
+                    else:
+                        out = node.fn(*args)
+                except BaseException as e:  # noqa: BLE001 — relayed to scheduler
+                    triggered.put((_ERR, e, ex, name, 0.0))
+                    return
                 t1 = time.perf_counter() - t_origin
                 triggered.put((name, out, ex, t0, t1))
 
         threads = [
             threading.Thread(target=executor_loop, args=(e,), daemon=True)
-            for e in range(self.n_executors)
+            for e in range(n_exec)
         ]
         for t in threads:
             t.start()
 
+        def dispatch() -> None:
+            """Fire ready ops highest-level-first at the least-loaded
+            executors until every buffer is full or nothing is ready."""
+            nonlocal peak_inflight
+            while ready:
+                ex = min(range(n_exec), key=lambda e: (inflight[e], e))
+                if inflight[ex] >= self.buffer_depth:
+                    return
+                _, _, name = heapq.heappop(ready)
+                node = g[name]
+                if not node.deps and name in inputs and node.fn is None:
+                    args: tuple = ()
+                else:
+                    args = tuple(results[d] for d in node.deps)
+                inflight[ex] += 1
+                peak_inflight = max(peak_inflight, inflight[ex])
+                buffers[ex].put((name, args))
+
         n_done = 0
         total = len(g)
         try:
+            dispatch()
             while n_done < total:
-                # fire ready ops at idle executors, highest level first (Alg. 1)
-                while ready and any(idle):
-                    ex = idle.index(True)  # bit-scan analogue
-                    _, _, name = heapq.heappop(ready)
-                    node = g[name]
-                    if not node.deps and name in inputs and node.fn is None:
-                        args: tuple = ()
-                    else:
-                        args = tuple(results[d] for d in node.deps)
-                    idle[ex] = False
-                    buffers[ex].put((name, args))
-                # poll triggered operations (Alg. 1 line 2)
-                name, out, ex, t0, t1 = triggered.get()
-                results[name] = out
-                idle[ex] = True
-                trace.append(TraceEvent(name, ex, t0, t1))
-                n_done += 1
-                for s in g.successors(name):
-                    indeg[s] -= 1
-                    if indeg[s] == 0:
-                        heapq.heappush(ready, (-self.levels[s], seq[s], s))
+                # poll triggered operations (Alg. 1 line 2); drain every
+                # completion that has already arrived so one dispatch round
+                # can refill all newly-idle executors
+                completed = [triggered.get()]
+                while True:
+                    try:
+                        completed.append(triggered.get_nowait())
+                    except queue.Empty:
+                        break
+                for name, out, ex, t0, t1 in completed:
+                    if name is _ERR:
+                        failing_op = t0
+                        raise RuntimeError(
+                            f"op {failing_op!r} failed on executor {ex}"
+                        ) from out
+                    results[name] = out
+                    inflight[ex] -= 1
+                    trace.append(TraceEvent(name, ex, t0, t1))
+                    n_done += 1
+                    for s in g.successors(name):
+                        indeg[s] -= 1
+                        if indeg[s] == 0:
+                            heapq.heappush(ready, (-self.levels[s], seq[s], s))
+                dispatch()
         finally:
             for b in buffers:
                 b.put(None)
@@ -134,59 +172,74 @@ class HostScheduler:
                 t.join(timeout=5)
 
         makespan = max((e.end for e in trace), default=0.0)
-        return HostRunResult(outputs=results, trace=trace, makespan=makespan)
+        return HostRunResult(
+            outputs=results, trace=trace, makespan=makespan,
+            peak_inflight=max(peak_inflight, 1),
+        )
 
 
 @dataclass
 class GraphiEngine:
-    """profile -> schedule -> execute (Fig 4)."""
+    """Deprecated shim: profile -> schedule -> execute (Fig 4).
+
+    Use ``repro.api.compile(graph_or_fn, ..., hw=...)`` instead — it returns
+    an :class:`~repro.api.Executable` owning the same pipeline as lazy
+    cached properties.  This class remains so pre-redesign call sites keep
+    working; every method delegates to an Executable underneath.
+    """
 
     graph: Graph
     hw: HardwareModel
     n_workers: int | None = None  # defaults to hw.n_workers minus 2 reserved
     reserved_workers: int = 2     # scheduler core + lightweight executor (§5.2)
-    _profile: ProfileResult | None = field(default=None, repr=False)
+    _exe: Any = field(default=None, repr=False)
+
+    def __post_init__(self) -> None:
+        warnings.warn(
+            "GraphiEngine is deprecated; use repro.api.compile(...) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+
+    def _executable(self):
+        if self._exe is None:
+            from repro.api import Executable
+
+            self._exe = Executable(
+                self.graph,
+                self.hw,
+                backend="sim",
+                n_workers=self.n_workers,
+                reserved_workers=self.reserved_workers,
+            )
+        return self._exe
 
     @property
     def usable_workers(self) -> int:
-        n = self.n_workers if self.n_workers is not None else self.hw.n_workers
-        return max(1, n - self.reserved_workers)
+        return self._executable().usable_workers
 
     def profile(self, **kw: Any) -> ProfileResult:
-        self._profile = profile(self.graph, self.hw, n_workers=self.usable_workers, **kw)
-        return self._profile
+        if kw:
+            return self._executable().profile_with(**kw)
+        return self._executable().profile
 
     def schedule(self, policy: str = "cpf") -> Schedule:
-        p = self._profile or self.profile()
-        return make_schedule(
-            self.graph,
-            self.hw,
-            n_executors=p.best_n_executors,
-            team_size=p.best_team_size,
-            policy=policy,
-        )
+        return self._executable().schedule_for(policy)
 
     def static_slots(self, policy: str = "cpf") -> list[list[str]]:
+        from .scheduler import slot_assignment
+
         return slot_assignment(self.graph, self.schedule(policy))
 
     def static_plan(self, mesh: Any, *, policy: str = "cpf", axis: str | None = None):
-        """Bind the frozen CPF schedule to device placement: barrier slots
-        over disjoint executor sub-meshes (repro.dist.executor_mesh)."""
         from repro.dist.executor_mesh import plan_from_schedule
 
         return plan_from_schedule(self.graph, self.schedule(policy), mesh, axis=axis)
 
     def simulate(self, policy: str = "cpf", **kw: Any) -> SimResult:
-        p = self._profile or self.profile()
-        cfg = SimConfig(
-            n_executors=p.best_n_executors, team_size=p.best_team_size, policy=policy, **kw
-        )
-        return simulate(self.graph, self.hw, cfg, costs=p.op_costs)
+        return self._executable().simulate(policy=policy, **kw)
 
     def execute_host(
         self, inputs: Mapping[str, Any] | None = None, n_executors: int | None = None
     ) -> HostRunResult:
-        p = self._profile or self.profile()
-        n = n_executors or p.best_n_executors
-        host = HostScheduler(self.graph, n, costs=p.op_costs)
-        return host.run(inputs)
+        return self._executable().execute_host(inputs, n_executors=n_executors)

@@ -160,19 +160,21 @@ class Graph:
         return lev
 
     def critical_path(self, costs: Mapping[str, float]) -> tuple[float, list[str]]:
-        """(length, node list) of the longest-cost path source→sink."""
+        """(length, node list) of the longest-cost path source→sink.
+
+        The maximum level is always attained at a source (levels are
+        non-increasing along edges), and the path follows max-level
+        successors all the way to a sink — zero-cost tail ops (a free
+        concat/loss node) are still on the path.
+        """
         lev = self.levels(costs)
         if not self._nodes:
             return 0.0, []
-        cur = max(self._nodes, key=lambda n: lev[n])
+        cur = max(self.sources(), key=lambda n: lev[n])
         path = [cur]
         while self._succs[cur]:
-            nxt = max(self._succs[cur], key=lambda s: lev[s])
-            # stop if remaining tail is not on the critical path
-            if lev[nxt] <= 0:
-                break
-            path.append(nxt)
-            cur = nxt
+            cur = max(self._succs[cur], key=lambda s: lev[s])
+            path.append(cur)
         return lev[path[0]], path
 
     # -- execution ----------------------------------------------------------

@@ -3,7 +3,7 @@
 The models layer speaks *logical* axes ("batch", "seq", "model", "attn_seq");
 this module owns the mapping onto physical mesh axes.  Everything degrades to
 a no-op without an active mesh, so the same model code runs single-device
-smoke tests and 512-chip dry-runs unchanged (DESIGN.md §3).
+smoke tests and 512-chip dry-runs unchanged (DESIGN.md §4).
 
 Key behaviours:
 
@@ -211,7 +211,7 @@ _PARAM_RULES: dict[str, tuple[str | None, ...]] = {
 }
 
 # MoE expert weights: [E, d, f] (+L) — experts ARE the executor groups
-# (DESIGN.md §5), sharded over the model axis.
+# (DESIGN.md §6), sharded over the model axis.
 _MOE_RULES: dict[str, tuple[str | None, ...]] = {
     "w_gate": ("model", None, None),
     "w_up": ("model", None, None),

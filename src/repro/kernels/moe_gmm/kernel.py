@@ -1,6 +1,6 @@
 """Grouped per-expert matmul Pallas kernel (MoE expert FFN).
 
-Experts are the Graphi "executor groups" of the MoE archs (DESIGN.md §5):
+Experts are the Graphi "executor groups" of the MoE archs (DESIGN.md §6):
 the leading E axis is embarrassingly parallel (sharded over the mesh's
 expert/model axis at the SPMD level; within a chip it is a parallel grid
 dimension).  Per expert this is a standard MXU-blocked matmul:

@@ -125,7 +125,7 @@ def plan_for(
 def skip_reason(arch: str, shape_name: str) -> str | None:
     canon = arch.replace("_", "-")
     if shape_name == "long_500k" and canon in FULL_ATTENTION_ARCHS:
-        return "full-attention arch: 524k decode is unbounded-cache/quadratic (DESIGN.md §5)"
+        return "full-attention arch: 524k decode is unbounded-cache/quadratic (DESIGN.md §6)"
     return None
 
 

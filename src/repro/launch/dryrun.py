@@ -32,7 +32,36 @@ from repro.models.api import model_flops
 MAX_MEMORY_BUMPS = 4
 
 
-def run_cell(arch: str, shape_name: str, mesh, *, want_roofline: bool, verbose: bool = False) -> dict:
+def graphi_record(cell, arch: str, shape_name: str) -> dict:
+    """Capture the cell's step fn into a scheduled ``Executable`` (abstract
+    specs — no allocation) and report the Graphi planning artifacts: node
+    count, DAG width, best executor config, modelled makespan, critical path.
+    """
+    from repro import api as graphi
+    from repro.core import TPUV5E
+    from repro.dist.sharding import use_mesh
+
+    with use_mesh(cell.ctx):
+        exe = graphi.compile(
+            cell.fn, *cell.args, hw=TPUV5E, backend="sim",
+            name=f"{arch}.{shape_name}",
+        )
+    g = exe.graph
+    prof = exe.profile
+    cp_len, cp = exe.critical_path
+    return {
+        "n_nodes": len(g),
+        "width": g.width(),
+        "n_executors": prof.best_n_executors,
+        "team_size": prof.best_team_size,
+        "sim_makespan_s": prof.best_makespan,
+        "critical_path_s": cp_len,
+        "critical_path_ops": len(cp),
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh, *, want_roofline: bool,
+             want_graphi: bool = True, verbose: bool = False) -> dict:
     rec: dict = {"arch": arch, "shape": shape_name, "mesh": describe_mesh(mesh)}
     reason = skip_reason(arch, shape_name)
     if reason:
@@ -113,6 +142,14 @@ def run_cell(arch: str, shape_name: str, mesh, *, want_roofline: bool, verbose: 
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-2000:]
         rec["compile_s"] = round(time.time() - t0, 1)
+        return rec
+    if want_graphi:
+        # independent of the XLA compile result: a capture failure degrades
+        # to a per-cell note, never a failed cell
+        try:
+            rec["graphi"] = graphi_record(cell, arch, shape_name)
+        except Exception as e:  # noqa: BLE001
+            rec["graphi_error"] = f"{type(e).__name__}: {e}"
     return rec
 
 
@@ -131,6 +168,10 @@ def summarize(records: list[dict]) -> str:
                 extra = (f" dom={rf['dominant'][:4]} c={rf['compute_s']*1e3:8.2f}ms"
                          f" m={rf['memory_s']*1e3:8.2f}ms x={rf['collective_s']*1e3:8.2f}ms"
                          f" useful={rf['useful_ratio']:.2f}")
+            if "graphi" in r:
+                gr = r["graphi"]
+                extra += (f" graphi={gr['n_nodes']}n/w{gr['width']}"
+                          f"/{gr['n_executors']}x{gr['team_size']}")
             rows.append(
                 f"OK   {r['arch']:22s} {r['shape']:12s} {r['mesh']:28s} "
                 f"{r['bytes_per_device']/1e9:6.1f}GB/dev {fit} mb={r['microbatches']}"
@@ -150,6 +191,8 @@ def main() -> int:
     p.add_argument("--mesh", choices=("pod", "multipod", "both"), default="both")
     p.add_argument("--out", default="results/dryrun.json")
     p.add_argument("--verbose", action="store_true")
+    p.add_argument("--no-graphi", action="store_true",
+                   help="skip the Graphi capture/schedule record per cell")
     args = p.parse_args()
 
     archs = [args.arch] if args.arch else list_archs()
@@ -165,7 +208,7 @@ def main() -> int:
         for arch in archs:
             for shape in shapes:
                 rec = run_cell(arch, shape, mesh, want_roofline=want_roofline,
-                               verbose=args.verbose)
+                               want_graphi=not args.no_graphi, verbose=args.verbose)
                 records.append(rec)
                 line = summarize([rec]).splitlines()[0]
                 print(line, flush=True)

@@ -18,12 +18,18 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, ShapeSpec
 from repro.models import api as model_api
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.optim.schedule import linear_warmup_cosine
 
-__all__ = ["TrainStepConfig", "init_train_state", "make_train_step"]
+__all__ = [
+    "TrainStepConfig",
+    "init_train_state",
+    "make_train_step",
+    "lm_loss_fn",
+    "compile_lm_loss",
+]
 
 
 @dataclass(frozen=True)
@@ -42,6 +48,54 @@ def init_train_state(cfg: ModelConfig, key, adamw_cfg: AdamWConfig | None = None
     params = transformer.init_params(cfg, key)
     opt = adamw_init(params, adamw_cfg)
     return {"params": params, **opt}
+
+
+def lm_loss_fn(model_cfg: ModelConfig, *, remat: bool = False) -> Callable:
+    """The scalar LM loss as a plain ``(params, batch) -> loss`` callable —
+    the capture target for ``repro.api.compile``."""
+
+    def loss(params, batch):
+        return model_api.lm_loss(model_cfg, params, batch, remat=remat)[0]
+
+    loss.__name__ = f"{model_cfg.name}.lm_loss"
+    return loss
+
+
+def compile_lm_loss(
+    model_cfg: ModelConfig,
+    shape: ShapeSpec,
+    *,
+    hw=None,
+    backend: str = "host",
+    remat: bool = False,
+    grad: bool = False,
+    unroll_layers: bool = True,
+    **kw: Any,
+):
+    """``repro.api.compile`` the loss graph of a model at an input shape.
+
+    Captures on abstract specs (no allocation); ``unroll_layers`` disables
+    ``lax.scan`` over layers so the scheduler sees the per-layer operator
+    DAG (leave it off to call the executable with real scanned params).
+    ``grad=True`` captures ``value_and_grad`` instead — the paper's "one
+    complete execution = one training iteration" graph.
+    """
+    from repro import api as graphi
+    from repro.core import KNL7250
+    from repro.models import transformer
+
+    cfg = model_cfg.reduced(scan_layers=False) if unroll_layers else model_cfg
+    fn = lm_loss_fn(cfg, remat=remat)
+    if grad:
+        fn = jax.value_and_grad(fn)
+    params_spec = jax.eval_shape(lambda k: transformer.init_params(cfg, k), jax.random.key(0))
+    batch_spec = model_api.input_specs(cfg, shape, kind="train")
+    return graphi.compile(
+        fn, params_spec, batch_spec,
+        hw=hw or KNL7250, backend=backend,
+        name=f"{cfg.name}.lm_loss" + ("+grad" if grad else ""),
+        **kw,
+    )
 
 
 def make_train_step(

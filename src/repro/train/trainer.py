@@ -67,6 +67,7 @@ class Trainer:
         checkpoint: CheckpointManager | None = None,
         fault_hook: Callable[[int], None] | None = None,
         on_straggler: Callable[[int, float], None] | None = None,
+        scheduled_makespan: float | None = None,
     ):
         self.step_fn = step_fn
         self.state = state
@@ -75,6 +76,10 @@ class Trainer:
         self.ckpt = checkpoint
         self.fault_hook = fault_hook
         self.on_straggler = on_straggler
+        # Graphi-modelled makespan of the captured loss graph (see
+        # train/step.py::compile_lm_loss) — reported next to wall-clock so
+        # logs show how far the real step sits from the scheduled bound
+        self.scheduled_makespan = scheduled_makespan
         self._template = jax.tree.map(lambda x: x, state)  # structure snapshot
 
     # -- recovery ------------------------------------------------------------
@@ -142,6 +147,8 @@ class Trainer:
             step += 1
             if step % cfg.log_every == 0 or step == cfg.total_steps:
                 rec = {"step": step, "time_s": dt}
+                if self.scheduled_makespan is not None:
+                    rec["graphi_makespan_s"] = self.scheduled_makespan
                 for k, v in metrics.items():
                     try:
                         rec[k] = float(v)

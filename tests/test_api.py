@@ -1,0 +1,252 @@
+"""The redesigned public API: ``repro.api.compile`` / ``Executable``, the
+deprecated ``GraphiEngine`` shim, and the HostScheduler dispatch redesign
+(multi-completion drain + honored ``buffer_depth``).
+"""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import api as graphi
+from repro.core import KNL7250, Graph, GraphiEngine, HostScheduler, SimResult
+
+
+def stat_diamond() -> Graph:
+    g = Graph("stat")
+    g.add_op("a", flops=1e9)
+    g.add_op("b", flops=2e9, deps=("a",))
+    g.add_op("c", flops=3e9, deps=("a",))
+    g.add_op("d", flops=4e9, deps=("b", "c"))
+    return g
+
+
+def fn_branches(x, w):
+    ys = [jnp.tanh(x @ (w * (0.1 * (i + 1)))) for i in range(4)]
+    return jnp.sum(sum(ys) ** 2)
+
+
+def _xw(n=32):
+    rng = np.random.default_rng(0)
+    return (jnp.asarray(rng.normal(size=(n, n)), jnp.float32),
+            jnp.asarray(rng.normal(size=(n, n)), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Executable surface
+# ---------------------------------------------------------------------------
+
+def test_compile_graph_artifacts_are_lazy_and_cached():
+    exe = graphi.compile(stat_diamond(), hw=KNL7250, backend="sim")
+    assert exe._profile is None and exe._schedule is None
+    p = exe.profile
+    assert exe._profile is p and exe.profile is p          # cached
+    sched = exe.schedule
+    assert exe.schedule is sched
+    sched.validate(exe.graph)
+    assert exe.slots and all(exe.slots)
+
+
+def test_compile_graph_rejects_specs_and_bad_backend():
+    with pytest.raises(TypeError):
+        graphi.compile(stat_diamond(), jnp.ones(3))
+    with pytest.raises(ValueError):
+        graphi.compile(stat_diamond(), backend="tpu")
+
+
+def test_sim_backend_call_returns_simresult():
+    exe = graphi.compile(stat_diamond(), hw=KNL7250, backend="sim")
+    res = exe()
+    assert isinstance(res, SimResult)
+    assert res.makespan > 0
+    assert exe.last_run is res
+
+
+def test_pinned_executor_config_skips_search():
+    exe = graphi.compile(stat_diamond(), hw=KNL7250, backend="sim",
+                         n_executors=2, team_size=8)
+    sched = exe.schedule
+    assert sched.n_executors == 2 and sched.team_size == 8
+    assert exe._profile is None      # pinning avoided the config search
+
+
+def test_critical_path_property_ends_at_sink():
+    exe = graphi.compile(stat_diamond(), hw=KNL7250, backend="sim")
+    length, path = exe.critical_path
+    assert path[0] == "a" and path[-1] == "d"
+    assert length > 0
+
+
+def test_compiled_fn_host_backend_matches_direct_call():
+    x, w = _xw()
+    exe = repro.compile(fn_branches, x, w)
+    out = exe(x, w)
+    assert float(jnp.abs(out - fn_branches(x, w))) < 1e-4
+    assert len({e.executor for e in exe.last_run.trace}) >= 2
+
+
+def test_mesh_backend_executes_static_plan():
+    import jax
+    from jax.sharding import Mesh
+
+    x, w = _xw(16)
+    devs = np.array(jax.devices()[:4]).reshape(4, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    exe = graphi.compile(fn_branches, x, w, backend="mesh", mesh=mesh,
+                         n_executors=4, team_size=2)
+    out = exe(x, w)
+    assert float(jnp.abs(out - fn_branches(x, w))) < 1e-4
+    assert exe.last_plan.n_executors == 4
+
+
+def test_describe_mentions_config_and_path():
+    exe = graphi.compile(stat_diamond(), hw=KNL7250, backend="sim")
+    text = exe.describe()
+    assert "executors" in text and "critical path" in text
+
+
+# ---------------------------------------------------------------------------
+# GraphiEngine: deprecated shim over Executable
+# ---------------------------------------------------------------------------
+
+def test_engine_shim_warns_and_matches_api():
+    g = stat_diamond()
+    with pytest.warns(DeprecationWarning):
+        eng = GraphiEngine(g, KNL7250)
+    exe = graphi.compile(g, hw=KNL7250, backend="sim")
+    assert eng.profile().best_config == exe.profile.best_config
+    assert eng.schedule().placements == exe.schedule.placements
+    assert eng.static_slots() == exe.slots
+
+
+def test_engine_shim_execute_host_still_runs():
+    g = Graph("run")
+    g.add_op("x", fn=lambda: jnp.ones((8, 8)))
+    g.add_op("y", deps=("x",), fn=lambda a: a * 2, flops=64)
+    g.add_op("z", deps=("y",), fn=lambda a: a.sum(), flops=64)
+    with pytest.warns(DeprecationWarning):
+        eng = GraphiEngine(g, KNL7250)
+    res = eng.execute_host()
+    assert float(res.outputs["z"]) == 128.0
+
+
+# ---------------------------------------------------------------------------
+# HostScheduler: buffer_depth honored, completions drained in batches
+# ---------------------------------------------------------------------------
+
+def _sources(n, dur=0.0):
+    g = Graph("wide")
+    for i in range(n):
+        g.add_op(f"s{i}", flops=1.0,
+                 fn=(lambda i=i: (time.sleep(dur), i)[1]))
+    g.add_op("sum", deps=tuple(f"s{i}" for i in range(n)),
+             flops=1.0, fn=lambda *xs: sum(xs))
+    return g
+
+
+def test_buffer_depth_queues_ahead():
+    g = _sources(3, dur=0.02)
+    res = HostScheduler(g, 1, buffer_depth=2).run()
+    assert res.outputs["sum"] == 3
+    # one executor, three ready sources: depth-2 buffer holds two at once
+    assert res.peak_inflight == 2
+
+
+def test_buffer_depth_one_never_queues_ahead():
+    g = _sources(3, dur=0.005)
+    res = HostScheduler(g, 1, buffer_depth=1).run()
+    assert res.outputs["sum"] == 3
+    assert res.peak_inflight == 1
+
+
+def test_invalid_construction_rejected():
+    g = _sources(2)
+    with pytest.raises(ValueError):
+        HostScheduler(g, 0)
+    with pytest.raises(ValueError):
+        HostScheduler(g, 2, buffer_depth=0)
+
+
+def test_drain_refills_all_idle_executors():
+    # 4 ops all complete while the scheduler is blocked on the first
+    # triggered.get(); the drain must refill every executor in one round,
+    # letting the second wave run concurrently
+    barrier = threading.Barrier(4, timeout=5)
+
+    def wave1(i):
+        barrier.wait()       # all four finish together
+        return i
+
+    g = Graph("drain")
+    for i in range(4):
+        g.add_op(f"a{i}", flops=1.0, fn=lambda i=i: wave1(i))
+    for i in range(4):
+        g.add_op(f"b{i}", deps=(f"a{i}",), flops=1.0,
+                 fn=lambda v: (time.sleep(0.03), v * 10)[1])
+    g.add_op("out", deps=tuple(f"b{i}" for i in range(4)),
+             flops=1.0, fn=lambda *xs: sum(xs))
+    res = HostScheduler(g, 4).run()
+    assert res.outputs["out"] == (0 + 10 + 20 + 30)
+    b_evts = [e for e in res.trace if e.op.startswith("b")]
+    assert len({e.executor for e in b_evts}) == 4
+    # the second wave overlapped: total b-span far below 4 sequential sleeps
+    span = max(e.end for e in b_evts) - min(e.start for e in b_evts)
+    assert span < 4 * 0.03
+
+
+def test_executor_exception_propagates_not_deadlocks():
+    g = Graph("boom")
+    g.add_op("a", flops=1.0, fn=lambda: 1)
+    g.add_op("b", deps=("a",), flops=1.0,
+             fn=lambda v: (_ for _ in ()).throw(ValueError("boom")))
+    with pytest.raises(RuntimeError, match="'b' failed"):
+        HostScheduler(g, 2).run()
+
+
+def test_explicit_executor_count_is_honored():
+    x, w = _xw(16)
+    exe = graphi.compile(fn_branches, x, w, backend="host")
+    exe.execute_host(exe.captured.bind((x, w)), n_executors=1)
+    assert {e.executor for e in exe.last_run.trace} == {0}
+
+
+def test_mesh_backend_raw_graph_uses_static_plan():
+    import jax
+    from jax.sharding import Mesh
+
+    g = Graph("run")
+    g.add_op("x", fn=lambda: 2.0)
+    g.add_op("y", deps=("x",), flops=1.0, fn=lambda a: a * 3)
+    devs = np.array(jax.devices()[:4]).reshape(4, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    exe = graphi.compile(g, backend="mesh", mesh=mesh,
+                         n_executors=2, team_size=2)
+    out = exe()
+    assert out["y"] == 6.0
+    assert exe.last_plan is not None
+    assert exe.static_plan() is exe.last_plan     # cached default plan
+
+
+def test_compile_captured_graph_rejects_specs():
+    from repro.core.capture import capture
+
+    cg = capture(lambda v: v * 2, jnp.ones((3,)))
+    with pytest.raises(TypeError):
+        graphi.compile(cg, jnp.ones((3,)))
+    exe = graphi.compile(cg)
+    assert exe.captured is cg
+
+
+def test_host_scheduler_random_dag_matches_interpreter():
+    rng = np.random.default_rng(7)
+    g = Graph("rand")
+    for i in range(40):
+        deps = tuple(f"n{d}" for d in rng.choice(i, size=min(i, rng.integers(0, 4)),
+                                                 replace=False)) if i else ()
+        g.add_op(f"n{i}", flops=float(rng.integers(1, 100)), deps=deps,
+                 fn=(lambda *xs, i=i: float(i) + sum(xs)))
+    res = HostScheduler(g, 3, buffer_depth=3).run()
+    assert res.outputs == g.execute()
+    assert res.peak_inflight >= 1

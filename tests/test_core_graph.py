@@ -56,6 +56,25 @@ def test_levels_and_critical_path():
     assert path == ["a", "c", "d"]
 
 
+def test_critical_path_keeps_zero_cost_tail():
+    # regression: a zero-cost sink (free concat/loss op) used to truncate
+    # the reported path at its last costly ancestor
+    g = Graph("tail")
+    g.add_op("a", flops=5.0)
+    g.add_op("b", flops=3.0, deps=("a",))
+    g.add_op("loss", flops=0.0, deps=("b",))
+    length, path = g.critical_path({"a": 5.0, "b": 3.0, "loss": 0.0})
+    assert length == 8.0
+    assert path == ["a", "b", "loss"]
+
+
+def test_critical_path_all_zero_costs_spans_source_to_sink():
+    g = diamond()
+    length, path = g.critical_path({n: 0.0 for n in g.names})
+    assert length == 0.0
+    assert path[0] == "a" and path[-1] == "d"
+
+
 def test_execute_sequential():
     g = Graph()
     g.add_op("x", fn=lambda: 3)

@@ -10,8 +10,9 @@ import pytest
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro import api as graphi
 from repro.configs.base import get_config
-from repro.core import KNL7250, make_schedule
+from repro.core import KNL7250
 from repro.core.wavefront import recurrence_graph
 from repro.dist.compress import compressed_psum
 from repro.dist.executor_mesh import (
@@ -171,7 +172,8 @@ def test_executor_stacked_mesh_splits_axis(mesh):
 
 def test_plan_from_schedule_slot_lanes(mesh):
     g = recurrence_graph(4, 6, flops_per_cell=1e6, bytes_per_cell=1e4)
-    sched = make_schedule(g, KNL7250, n_executors=4, team_size=8)
+    exe = graphi.compile(g, hw=KNL7250, backend="sim", n_executors=4, team_size=8)
+    sched = exe.schedule
     plan = plan_from_schedule(g, sched, mesh, axis="data")
     assert sorted(plan.placement) == sorted(g.names)
     assert plan.n_executors == 4
@@ -186,11 +188,11 @@ def test_plan_from_schedule_slot_lanes(mesh):
             assert slot_of[d] < slot_of[n]
 
 
-def test_engine_static_plan_end_to_end(mesh):
-    from repro.core import GraphiEngine, TPUV5E
+def test_executable_static_plan_end_to_end(mesh):
+    from repro.core import TPUV5E
 
     g = recurrence_graph(3, 5, flops_per_cell=1e9, bytes_per_cell=1e6)
-    eng = GraphiEngine(g, TPUV5E, n_workers=8)
-    plan = eng.static_plan(mesh, axis="data")
+    exe = graphi.compile(g, hw=TPUV5E, backend="sim", n_workers=8)
+    plan = exe.static_plan(mesh, axis="data")
     assert sorted(plan.placement) == sorted(g.names)
     assert 1 <= plan.n_executors <= 4
