@@ -15,6 +15,7 @@ _EXPORTS = {
     # the redesigned public API (repro.api)
     "compile": "repro.api",
     "Executable": "repro.api",
+    "serve_engine": "repro.api",
     # capture + graph IR
     "capture": "repro.core.capture",
     "CapturedGraph": "repro.core.capture",
@@ -31,6 +32,7 @@ _EXPORTS = {
     "SimResult": "repro.core.simulate",
     "simulate": "repro.core.simulate",
     # runtimes (GraphiEngine is deprecated; kept for pre-redesign callers)
+    "ExecutorPool": "repro.core.engine",
     "HostScheduler": "repro.core.engine",
     "HostRunResult": "repro.core.engine",
     "GraphiEngine": "repro.core.engine",

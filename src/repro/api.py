@@ -34,13 +34,13 @@ from typing import Any, Mapping
 
 from repro.core.capture import CapturedGraph, capture
 from repro.core.cost_model import KNL7250, HardwareModel, sequential_makespan
-from repro.core.engine import HostRunResult, HostScheduler
+from repro.core.engine import ExecutorPool, HostRunResult, HostScheduler
 from repro.core.graph import Graph
 from repro.core.profiler import ProfileResult, profile
 from repro.core.scheduler import Schedule, make_schedule, slot_assignment
 from repro.core.simulate import SimConfig, SimResult, simulate
 
-__all__ = ["Executable", "compile"]
+__all__ = ["Executable", "compile", "serve_engine"]
 
 _BACKENDS = ("host", "sim", "mesh")
 
@@ -66,6 +66,7 @@ class Executable:
         n_executors: int | None = None,
         team_size: int | None = None,
         mesh: Any = None,
+        pool: ExecutorPool | None = None,
     ):
         if backend not in _BACKENDS:
             raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
@@ -78,6 +79,9 @@ class Executable:
         self.reserved_workers = reserved_workers
         self._pin = (n_executors, team_size)
         self.mesh = mesh
+        self.pool = pool
+        self._host: HostScheduler | None = None
+        self._host_key: tuple | None = None
         self._profile: ProfileResult | None = None
         self._schedule: Schedule | None = None
         self._slots: list[list[str]] | None = None
@@ -199,18 +203,38 @@ class Executable:
             # explicitly requested count is honored as-is
             if self._graph.width() >= 2:
                 n = max(n, 2)
-        return min(n, max(1, len(self._graph)))
+        # input passthroughs resolve inline in the scheduler — only real
+        # ops occupy executor threads
+        n_real = sum(1 for nd in self._graph.nodes if nd.kind != "input")
+        return min(n, max(1, n_real))
+
+    @property
+    def planned_executors(self) -> int:
+        """Executor-thread count the host backend will actually use."""
+        return self._host_executors()
 
     def execute_host(
-        self, inputs: Mapping[str, Any] | None = None, n_executors: int | None = None
+        self,
+        inputs: Mapping[str, Any] | None = None,
+        n_executors: int | None = None,
+        pool: ExecutorPool | None = None,
     ) -> HostRunResult:
-        """Run the dynamic host runtime on a name→value input mapping."""
-        host = HostScheduler(
-            self._graph,
-            self._host_executors(n_executors),
-            costs=self.schedule.op_costs or None,
-        )
-        res = host.run(inputs)
+        """Run the dynamic host runtime on a name→value input mapping.
+
+        With a ``pool`` (given here or at compile time) the run submits to
+        those persistent executors — a serving decode loop reuses one
+        HostScheduler instead of paying thread startup per step — and the
+        pool's size wins over the planned executor count.
+        """
+        pool = pool if pool is not None else self.pool
+        n = self._host_executors(n_executors)
+        key = (n, id(pool))
+        if self._host is None or self._host_key != key:
+            self._host = HostScheduler(
+                self._graph, n, costs=self.schedule.op_costs or None, pool=pool
+            )
+            self._host_key = key
+        res = self._host.run(inputs)
         self.last_run = res
         return res
 
@@ -271,7 +295,9 @@ def compile(
     n_executors: int | None = None,
     team_size: int | None = None,
     fuse: bool = True,
+    jit_nodes: bool = False,
     mesh: Any = None,
+    pool: ExecutorPool | None = None,
 ) -> Executable:
     """Turn a JAX function (or a pre-built :class:`Graph`) into a scheduled
     :class:`Executable`.
@@ -279,7 +305,12 @@ def compile(
     ``specs`` are the function's example inputs — concrete arrays or
     ``jax.ShapeDtypeStruct`` pytrees (capture reads shapes/dtypes only).
     ``n_executors``/``team_size`` pin the executor configuration instead of
-    profiling for the best one.
+    profiling for the best one.  ``pool`` shares one persistent
+    :class:`ExecutorPool` across executables (e.g. a serve engine's prefill
+    and decode graphs submitting to the same executors).  ``jit_nodes``
+    wraps every node ``fn`` in ``jax.jit`` — one compiled XLA call per node
+    instead of eager per-equation dispatch, the right trade for graphs
+    executed thousands of times (a serving decode loop).
     """
     captured: CapturedGraph | None = None
     if isinstance(target, CapturedGraph):
@@ -294,6 +325,8 @@ def compile(
     else:
         captured = capture(target, *specs, name=name, fuse=fuse)
         graph = captured.graph
+    if jit_nodes:
+        graph = _jit_graph(graph)
     return Executable(
         graph,
         hw,
@@ -305,4 +338,47 @@ def compile(
         n_executors=n_executors,
         team_size=team_size,
         mesh=mesh,
+        pool=pool,
     )
+
+
+def _jit_graph(graph: Graph) -> Graph:
+    """A copy of ``graph`` with every node ``fn`` wrapped in ``jax.jit``.
+
+    A copy, not an in-place rewrite: callers may hand ``compile`` a graph
+    they still execute directly (the capture oracle, parity tests), and
+    re-compiling must not stack ``jit`` wrappers.
+    """
+    import jax
+    from dataclasses import replace
+
+    out = Graph(graph.name)
+    for name in graph.names:
+        node = graph[name]
+        out.add(replace(node, fn=jax.jit(node.fn) if node.fn is not None else None))
+    return out
+
+
+def serve_engine(
+    cfg: Any,
+    params: Any,
+    serve_cfg: Any = None,
+    *,
+    continuous: bool = True,
+    **kw: Any,
+) -> Any:
+    """Serve-shaped entry point: a serving engine over ``repro.compile``.
+
+    ``continuous=True`` (default) returns the
+    :class:`~repro.serve.engine.ContinuousEngine` — prefill and decode
+    captured as graphi Executables, a profiler-chosen executor config, and
+    per-request slot admission.  ``continuous=False`` returns the
+    length-bucketed wave :class:`~repro.serve.engine.ServeEngine`.
+    Extra kwargs go to the engine constructor — ``rng_seed=`` for either
+    engine; ``hw=``, ``max_executors=``, ``pool=`` are continuous-only.
+    """
+    from repro.serve.engine import ContinuousEngine, ServeConfig, ServeEngine
+
+    scfg = serve_cfg if serve_cfg is not None else ServeConfig()
+    eng_cls = ContinuousEngine if continuous else ServeEngine
+    return eng_cls(cfg, params, scfg, **kw)

@@ -55,13 +55,19 @@ def profile(
     *,
     n_workers: int,
     policy: str = "cpf",
+    max_executors: int | None = None,
     extra_configs: list[tuple[int, int]] | None = None,
     measured_costs: Callable[[int], Mapping[str, float]] | None = None,
     seed: int = 0,
 ) -> ProfileResult:
     """Search symmetric configs; ``measured_costs(team_size)`` optionally
-    overrides the analytic cost table (the paper's first-iterations timing)."""
-    configs = enumerate_symmetric_configs(n_workers)
+    overrides the analytic cost table (the paper's first-iterations timing).
+
+    ``max_executors`` bounds the sweep (serving wants a cap so one request
+    stream cannot claim the whole machine); ``extra_configs`` are explicit
+    additions and are *not* re-filtered by the bound.
+    """
+    configs = enumerate_symmetric_configs(n_workers, max_executors=max_executors)
     if extra_configs:
         configs = sorted(set(configs) | set(extra_configs))
     results: dict[tuple[int, int], float] = {}

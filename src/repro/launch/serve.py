@@ -1,7 +1,12 @@
 """Serving CLI: ``python -m repro.launch.serve --arch gemma-2b --smoke``.
 
-Builds a (randomly initialized) model, submits a batch of synthetic
-requests to the wave-batching engine, and reports decode throughput.
+Builds a (randomly initialized) model, submits synthetic requests, and
+reports decode throughput + per-request latency.  ``--continuous`` routes
+through the graphi-scheduled :class:`ContinuousEngine` (prefill/decode
+captured via ``repro.compile``, profiler-chosen executor config, slot
+admission between decode steps); the default is the wave batcher.
+``--arrival-rate`` staggers request arrivals (Poisson, requests/second)
+instead of submitting everything up front.
 """
 from __future__ import annotations
 
@@ -13,40 +18,131 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.models import transformer
-from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.engine import ContinuousEngine, Request, ServeConfig, ServeEngine
+
+
+def build_requests(cfg, *, n_requests, prompt_lens, max_new,
+                   arrival_rate=0.0, seed=0) -> list[tuple[float, Request]]:
+    """(arrival_time, request) pairs: Poisson arrivals (all at t=0 when
+    ``arrival_rate`` is 0), prompt lengths cycled from ``prompt_lens``.
+    Shared by the CLI and ``scripts/bench_serve.py``."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for i in range(n_requests):
+        if arrival_rate > 0:
+            t += float(rng.exponential(1.0 / arrival_rate))
+        prompt = rng.integers(
+            1, cfg.vocab_size, size=prompt_lens[i % len(prompt_lens)]
+        ).astype(np.int32)
+        out.append((t, Request(request_id=i, prompt=prompt, max_new_tokens=max_new)))
+    return out
+
+
+def percentile(xs, q: float) -> float:
+    """Index-based percentile of a sequence (0.0 when empty)."""
+    xs = sorted(xs)
+    if not xs:
+        return 0.0
+    return xs[min(len(xs) - 1, int(len(xs) * q))]
+
+
+def drive(engine, arrivals: list[tuple[float, Request]], *, continuous: bool):
+    """Feed requests at their arrival times; returns (done, latency, wall).
+
+    The wave engine drains its queue whenever it is idle and work has
+    arrived (its own granularity — one ``run()`` per busy period); the
+    continuous engine steps, admitting arrivals between decode steps.
+    """
+    t0 = time.perf_counter()
+    todo = list(arrivals)
+    done: list[Request] = []
+    finish: dict[int, float] = {}
+    while True:
+        now = time.perf_counter() - t0
+        while todo and todo[0][0] <= now:
+            engine.submit(todo.pop(0)[1])
+        busy = engine.has_work if continuous else bool(engine.queue)
+        if busy:
+            if continuous:
+                engine.step()
+                for r in engine.completed:
+                    if r.request_id not in finish:
+                        finish[r.request_id] = time.perf_counter() - t0
+            else:
+                batch = engine.run()
+                stamp = time.perf_counter() - t0
+                for r in batch:
+                    finish[r.request_id] = stamp
+                    done.append(r)
+        elif todo:
+            time.sleep(max(0.0, todo[0][0] - (time.perf_counter() - t0)))
+        else:
+            break
+    if continuous:
+        done = engine.run()
+    arrive = {r.request_id: t for t, r in arrivals}
+    lat = {r.request_id: finish[r.request_id] - arrive[r.request_id] for r in done}
+    return done, lat, time.perf_counter() - t0
 
 
 def main() -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", required=True)
     p.add_argument("--smoke", action="store_true")
-    p.add_argument("--requests", type=int, default=8)
-    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--continuous", action="store_true",
+                   help="continuous batching on the graphi runtime")
+    p.add_argument("--arrival-rate", type=float, default=0.0,
+                   help="Poisson arrival rate (req/s); 0 = all at once")
+    def _positive(v):
+        n = int(v)
+        if n < 1:
+            raise argparse.ArgumentTypeError("need at least 1 request")
+        return n
+
+    p.add_argument("--requests", type=_positive, default=8)
+    p.add_argument("--prompt-len", default="32",
+                   help="prompt length, or comma list for mixed lengths")
     p.add_argument("--max-new", type=int, default=32)
     p.add_argument("--max-batch", type=int, default=8)
+    p.add_argument("--max-executors", type=int, default=None,
+                   help="bound the profiler's executor-config search")
     p.add_argument("--temperature", type=float, default=0.0)
     args = p.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = transformer.init_params(cfg, jax.random.key(0))
-    engine = ServeEngine(cfg, params, ServeConfig(
+    prompt_lens = [int(x) for x in str(args.prompt_len).split(",")]
+    scfg = ServeConfig(
         max_batch=args.max_batch,
-        max_len=args.prompt_len + args.max_new + 1,
+        max_len=max(prompt_lens) + args.max_new + 1,
         temperature=args.temperature,
-    ))
-    rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        engine.submit(Request(
-            request_id=i,
-            prompt=rng.integers(1, cfg.vocab_size, size=args.prompt_len).astype(np.int32),
-            max_new_tokens=args.max_new,
-        ))
-    t0 = time.perf_counter()
-    done = engine.run()
-    dt = time.perf_counter() - t0
+    )
+    if args.continuous:
+        engine = ContinuousEngine(cfg, params, scfg, max_executors=args.max_executors)
+        print(f"continuous engine: {engine.pool.n_executors} executors "
+              f"(profiled best {engine.profile.best_config}), "
+              f"{engine.capacity} slots")
+    else:
+        engine = ServeEngine(cfg, params, scfg)
+
+    arrivals = build_requests(cfg, n_requests=args.requests, prompt_lens=prompt_lens,
+                              max_new=args.max_new, arrival_rate=args.arrival_rate)
+    done, lat, wall = drive(engine, arrivals, continuous=args.continuous)
     n_tokens = sum(len(r.output) for r in done)
-    print(f"served {len(done)} requests, {n_tokens} tokens in {dt:.2f}s "
-          f"({n_tokens/dt:.1f} tok/s incl. prefill+compile)")
+    p50 = percentile(lat.values(), 0.50)
+    p95 = percentile(lat.values(), 0.95)
+    mode = "continuous" if args.continuous else "wave"
+    print(f"[{mode}] served {len(done)} requests, {n_tokens} tokens in {wall:.2f}s "
+          f"({n_tokens / wall:.1f} tok/s incl. prefill+compile); "
+          f"latency p50={p50 * 1e3:.0f}ms p95={p95 * 1e3:.0f}ms")
+    if args.continuous:
+        print(f"  steps={engine.n_steps} decode_steps={engine.n_decode_steps} "
+              f"overlapped_prefills={engine.n_overlapped_prefills}")
+        engine.close()
+    bad = [t for r in done for t in r.output if t >= cfg.vocab_size]
+    if bad:   # not an assert: the check must survive python -O
+        raise SystemExit(f"emitted out-of-vocab ids: {bad[:5]}")
     for r in done[:3]:
         print(f"  req {r.request_id}: {len(r.output)} tokens, first 8 = {r.output[:8]}")
     return 0

@@ -178,8 +178,8 @@ def decode_attention(
     q: jax.Array,        # [B, 1, Hq, hd]
     k_cache: jax.Array,  # [B, Smax, Hkv, hd] (linear or ring buffer)
     v_cache: jax.Array,
-    kv_pos: jax.Array,   # [Smax] absolute position per slot; -1 = empty
-    q_pos: jax.Array,    # [] absolute position of the query token
+    kv_pos: jax.Array,   # [Smax] | [B, Smax] absolute position per slot; -1 = empty
+    q_pos: jax.Array,    # [] | [B] absolute position of the query token
     *,
     window: int | None = None,
 ) -> jax.Array:
@@ -187,17 +187,27 @@ def decode_attention(
 
     Slot-position masking handles both linear caches (kv_pos = 0..len-1,
     rest -1) and ring buffers for sliding-window archs (slot s holds absolute
-    position kv_pos[s]).
+    position kv_pos[s]).  A 2-D ``kv_pos`` (with ``q_pos`` per batch row)
+    is the continuous-batching layout: every row is an independent request
+    at its own decode position over its own slice of the shared cache.
     """
     B, _, Hq, hd = q.shape
     _, Smax, Hkv, _ = k_cache.shape
     G = Hq // Hkv
     qg = q.reshape(B, Hkv, G, hd) * hd ** -0.5
     s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache).astype(jnp.float32)
-    keep = (kv_pos >= 0) & (kv_pos <= q_pos)
-    if window is not None:
-        keep &= kv_pos > q_pos - window
-    s = jnp.where(keep[None, None, None, :], s, _NEG_INF)
+    if kv_pos.ndim == 2:
+        qp = q_pos[:, None]
+        keep = (kv_pos >= 0) & (kv_pos <= qp)
+        if window is not None:
+            keep &= kv_pos > qp - window
+        keep = keep[:, None, None, :]
+    else:
+        keep = (kv_pos >= 0) & (kv_pos <= q_pos)
+        if window is not None:
+            keep &= kv_pos > q_pos - window
+        keep = keep[None, None, None, :]
+    s = jnp.where(keep, s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache)
     return out.reshape(B, 1, Hq, hd).astype(q.dtype)

@@ -37,7 +37,15 @@ from .layers import (
 from .mamba import init_mamba_cache, init_mamba_params, mamba_block, mamba_decode_step
 from .moe import init_moe_params, moe_ffn
 
-__all__ = ["init_params", "forward", "init_cache", "prefill", "decode_step"]
+__all__ = [
+    "init_params",
+    "forward",
+    "init_cache",
+    "prefill",
+    "decode_step",
+    "cache_insert_slot",
+    "cache_evict_slot",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -238,9 +246,11 @@ def _embed(cfg: ModelConfig, params, tokens, pos_offset=None):
             freqs = jnp.exp(
                 -math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1)
             )
-            ang = pos_offset.astype(jnp.float32) * freqs
-            pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)]).astype(x.dtype)
-            x = x + pe[None, None, :]
+            ang = pos_offset.astype(jnp.float32)[..., None] * freqs
+            pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(x.dtype)
+            # pos_offset is a scalar (shared decode position) or [B]
+            # (per-slot continuous batching)
+            x = x + (pe[None, None, :] if pe.ndim == 1 else pe[:, None, :])
     return x
 
 
@@ -328,7 +338,8 @@ def _attn_cache_len(cfg: ModelConfig, max_len: int) -> int:
     return min(max_len, w) if w else max_len
 
 
-def _layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype,
+                 per_slot: bool = False):
     if kind == "ssm":
         return init_mamba_cache(cfg, batch, dtype)
     if kind == "rglru":
@@ -338,19 +349,29 @@ def _layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
     return {
         "k": jnp.zeros((batch, C, cfg.n_kv_heads, hd), dtype),
         "v": jnp.zeros((batch, C, cfg.n_kv_heads, hd), dtype),
-        "pos": jnp.full((C,), -1, jnp.int32),
+        "pos": jnp.full((batch, C) if per_slot else (C,), -1, jnp.int32),
     }
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, per_slot: bool = False) -> dict:
+    """KV/state cache for ``batch`` sequences of up to ``max_len`` tokens.
+
+    ``per_slot=True`` is the continuous-batching layout: every batch row is
+    an independent request *slot* with its own decode position (``len`` is
+    ``[batch]``, attention position tables are ``[batch, C]``), so rows at
+    different depths decode in one step and free slots are re-filled via
+    :func:`cache_insert_slot` / :func:`cache_evict_slot`.
+    """
     dtype = cfg.dtype
     kinds = cfg.layer_kinds()
     if cfg.scan_layers and cfg.is_homogeneous:
-        per = [_layer_cache(cfg, kinds[i], batch, max_len, dtype) for i in range(cfg.n_layers)]
+        per = [_layer_cache(cfg, kinds[i], batch, max_len, dtype, per_slot)
+               for i in range(cfg.n_layers)]
         layers = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
     else:
-        layers = [_layer_cache(cfg, k, batch, max_len, dtype) for k in kinds]
-    cache: dict[str, Any] = {"len": jnp.zeros((), jnp.int32), "layers": layers}
+        layers = [_layer_cache(cfg, k, batch, max_len, dtype, per_slot) for k in kinds]
+    shape = (batch,) if per_slot else ()
+    cache: dict[str, Any] = {"len": jnp.zeros(shape, jnp.int32), "layers": layers}
     if cfg.frontend == "audio":
         cache["enc"] = jnp.zeros((batch, cfg.encoder_len, cfg.d_model), dtype)
     return cache
@@ -366,8 +387,62 @@ def _write_prefill(lc, k, v):
     lc = dict(lc)
     lc["k"] = lc["k"].at[:, slots].set(k[:, -take:])
     lc["v"] = lc["v"].at[:, slots].set(v[:, -take:])
-    lc["pos"] = lc["pos"].at[slots].set(pos)
+    if lc["pos"].ndim == 2:   # per-slot table: broadcast over the batch rows
+        lc["pos"] = lc["pos"].at[:, slots].set(pos)
+    else:
+        lc["pos"] = lc["pos"].at[slots].set(pos)
     return lc
+
+
+def _cache_batch_axis(cfg: ModelConfig) -> int:
+    """Leading axis index of the batch/slot dim in cache leaves (stacked
+    homogeneous layouts carry the layer dim first)."""
+    return 1 if (cfg.scan_layers and cfg.is_homogeneous) else 0
+
+
+def cache_insert_slot(cfg: ModelConfig, cache: dict, sub: dict, slot) -> dict:
+    """Install a single-request cache (``init_cache(cfg, 1, ..., per_slot=True)``
+    filled by :func:`prefill`) into row ``slot`` of a shared per-slot cache.
+
+    Overwrites the slot's K/V, position table, and recurrent state wholesale,
+    so whatever the previous occupant (or an idle slot's garbage decode
+    steps) left behind is evicted by construction.
+    """
+    ax = _cache_batch_axis(cfg)
+
+    def ins(dst, src):
+        if ax == 1:
+            return dst.at[:, slot].set(src[:, 0])
+        return dst.at[slot].set(src[0])
+
+    cache = dict(cache)
+    cache["layers"] = jax.tree.map(ins, cache["layers"], sub["layers"])
+    cache["len"] = cache["len"].at[slot].set(sub["len"][0])
+    return cache
+
+
+def cache_evict_slot(cfg: ModelConfig, cache: dict, slot) -> dict:
+    """Free row ``slot``: position tables go to -1 (attention masks every
+    cache entry out) and the slot's length resets.  K/V and recurrent state
+    are left in place — they are unreachable once the positions are cleared
+    and are overwritten by the next :func:`cache_insert_slot`."""
+    ax = _cache_batch_axis(cfg)
+
+    def ev(layers):
+        if not isinstance(layers, dict) or "pos" not in layers:
+            return layers
+        lc = dict(layers)
+        lc["pos"] = (lc["pos"].at[:, slot].set(-1) if ax == 1
+                     else lc["pos"].at[slot].set(-1))
+        return lc
+
+    cache = dict(cache)
+    if isinstance(cache["layers"], list):
+        cache["layers"] = [ev(lc) for lc in cache["layers"]]
+    else:
+        cache["layers"] = ev(cache["layers"])
+    cache["len"] = cache["len"].at[slot].set(0)
+    return cache
 
 
 def _block_decode(cfg: ModelConfig, lp, kind: str, x, lc, *, q_pos, enc=None):
@@ -385,15 +460,23 @@ def _block_decode(cfg: ModelConfig, lp, kind: str, x, lc, *, q_pos, enc=None):
         q = jnp.einsum("bsd,de->bse", h, ap["wq"]).reshape(B, 1, cfg.n_heads, hd)
         k = jnp.einsum("bsd,de->bse", h, ap["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
         v = jnp.einsum("bsd,de->bse", h, ap["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
-        pos_arr = q_pos[None]
+        pos_arr = q_pos[:, None] if q_pos.ndim else q_pos[None]
         q = apply_rope(q, pos_arr, cfg.rope_theta)
         k = apply_rope(k, pos_arr, cfg.rope_theta)
         C = lc["k"].shape[1]
-        slot = q_pos % C
         lc = dict(lc)
-        lc["k"] = jax.lax.dynamic_update_index_in_dim(lc["k"], k[:, 0], slot, 1)
-        lc["v"] = jax.lax.dynamic_update_index_in_dim(lc["v"], v[:, 0], slot, 1)
-        lc["pos"] = jax.lax.dynamic_update_index_in_dim(lc["pos"], q_pos, slot, 0)
+        if q_pos.ndim:
+            # continuous batching: each row writes at its own ring slot
+            slots = q_pos % C
+            rows = jnp.arange(B)
+            lc["k"] = lc["k"].at[rows, slots].set(k[:, 0])
+            lc["v"] = lc["v"].at[rows, slots].set(v[:, 0])
+            lc["pos"] = lc["pos"].at[rows, slots].set(q_pos)
+        else:
+            slot = q_pos % C
+            lc["k"] = jax.lax.dynamic_update_index_in_dim(lc["k"], k[:, 0], slot, 1)
+            lc["v"] = jax.lax.dynamic_update_index_in_dim(lc["v"], v[:, 0], slot, 1)
+            lc["pos"] = jax.lax.dynamic_update_index_in_dim(lc["pos"], q_pos, slot, 0)
         out = decode_attention(
             q, lc["k"], lc["v"], lc["pos"], q_pos, window=_window_for(cfg, kind)
         )
@@ -480,7 +563,8 @@ def prefill(cfg: ModelConfig, params, batch: dict, cache: dict):
 
     cache = dict(cache)
     cache["layers"] = new_layers
-    cache["len"] = jnp.asarray(S, jnp.int32)
+    # scalar for the shared-position layout, [B] for per-slot caches
+    cache["len"] = jnp.full_like(cache["len"], S)
     x = rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
     return _logits(cfg, params, x), cache
 

@@ -1,4 +1,15 @@
-"""Serving: prefill/decode step functions and the batched engine."""
-from .step import make_decode_step, make_prefill_step
+"""Serving: prefill/decode step functions, pad-masked sampling, and the
+continuous-batching + wave engines."""
+from .engine import ContinuousEngine, Request, ServeConfig, ServeEngine
+from .step import make_decode_step, make_prefill_step, mask_pad_vocab, sample_tokens
 
-__all__ = ["make_decode_step", "make_prefill_step"]
+__all__ = [
+    "ContinuousEngine",
+    "Request",
+    "ServeConfig",
+    "ServeEngine",
+    "make_decode_step",
+    "make_prefill_step",
+    "mask_pad_vocab",
+    "sample_tokens",
+]

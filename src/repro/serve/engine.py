@@ -1,18 +1,29 @@
-"""Batched serving engine (length-bucketed wave batching).
+"""Serving engines: continuous batching on the graphi runtime + the wave batcher.
 
-Requests queue up; the engine groups them into waves of up to ``max_batch``
-requests of *equal prompt length* (the KV cache's slot-position table is
-shared across the batch, so mixed-length padding would let pad tokens leak
-into attention — the bucketing keeps batched decode bit-identical to
-unbatched, which tests/test_serve_engine.py asserts).  Each wave: one
-batched prefill, then a batched greedy/temperature decode loop until every
-sequence hits EOS or its token budget.  This is the throughput-oriented
-regime the ``decode_*`` dry-run shapes model; latency-oriented continuous
-batching would interleave prefills into the decode stream — noted as
-future work in DESIGN.md.
+:class:`ContinuousEngine` — the latency-oriented engine (the regime
+DESIGN.md §6 describes): a persistent decode loop over a fixed-capacity
+per-slot KV cache (``transformer.init_cache(per_slot=True)``).  Each batch
+row is a request *slot* at its own decode position; new requests' prefills
+are admitted into free slots **between decode steps** — overlapped with the
+in-flight decode on the same executor pool — and a finished request frees
+its slot immediately on EOS/budget, so no request ever stalls on a
+stranger's long prompt.  Prefill and decode are captured via
+``repro.api.compile(backend="host")``; the profiler's configuration search
+picks the executor count at engine construction, and both graphs submit to
+one persistent :class:`~repro.core.engine.ExecutorPool`.
+
+:class:`ServeEngine` — the throughput-oriented wave batcher kept as the
+baseline: requests are grouped into waves of equal prompt length, one
+batched prefill, then batched decode until every member finishes.
+
+Both engines sample over the pad-masked vocabulary
+(:func:`repro.serve.step.sample_tokens`), so emitted ids are always
+``< cfg.vocab_size`` even though the unembedding spans ``padded_vocab``.
 """
 from __future__ import annotations
 
+import threading
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Sequence
 
@@ -21,9 +32,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.cost_model import KNL7250, HardwareModel
+from repro.core.engine import ExecutorPool
 from repro.models import transformer
+from repro.serve.step import make_decode_step, make_prefill_step, sample_tokens
 
-__all__ = ["Request", "ServeConfig", "ServeEngine"]
+__all__ = ["Request", "ServeConfig", "ServeEngine", "ContinuousEngine"]
 
 
 @dataclass
@@ -35,28 +49,61 @@ class Request:
     # filled by the engine:
     output: list[int] = field(default_factory=list)
     done: bool = False
+    _order: int = field(default=-1, repr=False, compare=False)
 
 
 @dataclass(frozen=True)
 class ServeConfig:
-    max_batch: int = 8
+    max_batch: int = 8              # wave width / continuous slot capacity
     max_len: int = 512
     temperature: float = 0.0        # 0 => greedy
     pad_id: int = 0
 
 
-class ServeEngine:
+class _SamplerMixin:
+    """Shared pad-masked sampling (greedy or temperature) with key threading."""
+
+    cfg: ModelConfig
+    scfg: ServeConfig
+    _key: jax.Array
+
+    def _sample(self, logits) -> np.ndarray:
+        key = None
+        if self.scfg.temperature > 0:
+            self._key, key = jax.random.split(self._key)
+        toks = sample_tokens(logits, self.cfg.vocab_size, self.scfg.temperature, key)
+        return np.asarray(toks, np.int32)
+
+
+class ServeEngine(_SamplerMixin):
+    """Length-bucketed wave batcher (the throughput baseline).
+
+    The KV cache's slot-position table is shared across a wave, so waves are
+    bucketed to *equal prompt length* — batched decode stays bit-identical
+    to unbatched (tests/test_serve_engine.py).  A wave stalls on its slowest
+    member; for latency under staggered arrivals use
+    :class:`ContinuousEngine`.
+    """
+
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig, *, rng_seed: int = 0):
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self.queue: list[Request] = []
+        self._n_submitted = 0
         self._key = jax.random.key(rng_seed)
         self._prefill = jax.jit(lambda p, c, b: transformer.prefill(cfg, p, b, c))
         self._decode = jax.jit(lambda p, c, t: transformer.decode_step(cfg, p, t, c))
 
     def submit(self, req: Request) -> None:
-        assert len(req.prompt) + req.max_new_tokens <= self.scfg.max_len, "budget"
+        if len(req.prompt) + req.max_new_tokens > self.scfg.max_len:
+            raise ValueError(
+                f"request {req.request_id}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds max_len "
+                f"({self.scfg.max_len})"
+            )
+        req._order = self._n_submitted
+        self._n_submitted += 1
         self.queue.append(req)
 
     # -- one wave -------------------------------------------------------------
@@ -65,7 +112,6 @@ class ServeEngine:
         B = len(wave)
         Ls = {len(r.prompt) for r in wave}
         assert len(Ls) == 1, "waves are length-bucketed"
-        S = Ls.pop()
         toks = np.stack([r.prompt for r in wave]).astype(np.int32)
         cache = transformer.init_cache(cfg, B, scfg.max_len)
         logits, cache = self._prefill(self.params, cache, {"tokens": jnp.asarray(toks)})
@@ -74,12 +120,7 @@ class ServeEngine:
         budget = np.array([r.max_new_tokens for r in wave])
         n_emitted = np.zeros(B, int)
         while active.any():
-            if scfg.temperature > 0:
-                self._key, sub = jax.random.split(self._key)
-                nxt = jax.random.categorical(sub, logits / scfg.temperature, axis=-1)
-            else:
-                nxt = jnp.argmax(logits, axis=-1)
-            nxt_np = np.asarray(nxt, np.int32)
+            nxt_np = self._sample(logits)
             for i, r in enumerate(wave):
                 if not active[i]:
                     continue
@@ -106,5 +147,249 @@ class ServeEngine:
                 wave = reqs[lo : lo + self.scfg.max_batch]
                 self._run_wave(wave)
                 done.extend(wave)
-        done.sort(key=lambda r: r.request_id)
+        done.sort(key=lambda r: r._order)
+        return done
+
+
+class ContinuousEngine(_SamplerMixin):
+    """Continuous-batching engine driven by graphi Executables.
+
+    Construction captures the batched decode step and profiles it
+    (``repro.core.profiler.profile`` picks ``n_executors × team_size`` for
+    the serving graph, optionally bounded by ``max_executors``); prefill
+    graphs are compiled per prompt length on demand, pinned to the same
+    config, and share the decode graph's persistent executor pool — so an
+    admission prefill runs *concurrently* with the in-flight decode step.
+
+    Protocol per :meth:`step`:
+
+    1. **admit** — pending requests claim free slots; their prefills run on
+       the pool while the decode step for currently-active slots executes;
+    2. **install** — each prefilled request's K/V lands in its slot
+       (:func:`transformer.cache_insert_slot`), its first token is sampled
+       from the prefill logits;
+    3. **retire** — EOS/budget frees the slot immediately
+       (:func:`transformer.cache_evict_slot`); the next step's admission
+       fills it.
+
+    Idle slots decode a pad token against an all-masked position table;
+    their output is discarded and their cache rows are overwritten wholesale
+    at the next insert, so active rows stay bit-identical to unbatched
+    greedy decode (dense archs; MoE capacity routing couples batch rows and
+    is only *approximately* parity-preserving, exactly as in wave batching).
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        scfg: ServeConfig,
+        *,
+        rng_seed: int = 0,
+        hw: HardwareModel = KNL7250,
+        max_executors: int | None = None,
+        pool: ExecutorPool | None = None,
+    ):
+        if cfg.frontend:
+            raise ValueError("continuous batching supports decoder-only archs "
+                             f"(got frontend={cfg.frontend!r})")
+        from repro import api
+
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.hw = hw
+        self._key = jax.random.key(rng_seed)
+        self.capacity = scfg.max_batch
+        self.cache = transformer.init_cache(cfg, self.capacity, scfg.max_len, per_slot=True)
+        self._zero_sub_cache = transformer.init_cache(cfg, 1, scfg.max_len, per_slot=True)
+
+        tok_spec = jax.ShapeDtypeStruct((self.capacity, 1), jnp.int32)
+        self._decode_exe = api.compile(
+            make_decode_step(cfg), params, self.cache, tok_spec,
+            hw=hw, backend="host", jit_nodes=True,
+            name=f"serve_decode[{cfg.name}]",
+        )
+        # profiler-chosen executor config for the serving graph (§4.2 search,
+        # optionally bounded — serving should not claim the whole machine)
+        if max_executors is not None:
+            self.profile = self._decode_exe.profile_with(max_executors=max_executors)
+        else:
+            self.profile = self._decode_exe.profile
+        n_exec = self._decode_exe.planned_executors
+        if max_executors is not None:
+            n_exec = max(1, min(n_exec, max_executors))
+        self.pool = pool if pool is not None else ExecutorPool(n_exec)
+        self._own_pool = pool is None
+        self._decode_exe.pool = self.pool
+        self._team_size = self.profile.best_team_size
+        self._prefill_exes: dict[int, api.Executable] = {}
+
+        # slot insert/evict are jitted with a *traced* slot index: one
+        # compile covers every slot (XLA scatter compiles are slow, and the
+        # admission path runs per request)
+        self._insert = jax.jit(
+            lambda cache, sub, slot: transformer.cache_insert_slot(cfg, cache, sub, slot))
+        self._evict = jax.jit(
+            lambda cache, slot: transformer.cache_evict_slot(cfg, cache, slot))
+
+        self.slots: list[Request | None] = [None] * self.capacity
+        self.pending: deque[Request] = deque()
+        self.completed: list[Request] = []
+        self._tokens = np.full((self.capacity, 1), scfg.pad_id, np.int32)
+        self._n_submitted = 0
+        # loop counters (benchmarks read these)
+        self.n_steps = 0
+        self.n_decode_steps = 0
+        self.n_overlapped_prefills = 0
+        # warm every per-step code path against throwaway state (first
+        # executions compile per-shape kernels), so the serving loop runs at
+        # steady-state cost from the first request on
+        warm = jax.tree.map(jnp.zeros_like, self.cache)
+        logits, _ = self._decode_exe(params, warm, jnp.asarray(self._tokens))
+        sample_tokens(logits, cfg.vocab_size, scfg.temperature,
+                      jax.random.key(0) if scfg.temperature > 0 else None)
+        warm = self._insert(warm, self._zero_sub_cache, jnp.int32(0))
+        warm = self._evict(warm, jnp.int32(0))
+        jax.block_until_ready(warm["len"])
+
+    # -- lifecycle -------------------------------------------------------------
+    def close(self) -> None:
+        if self._own_pool:
+            self.pool.close()
+
+    def __enter__(self) -> "ContinuousEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- submission ------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.scfg.max_len:
+            raise ValueError(
+                f"request {req.request_id}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds max_len "
+                f"({self.scfg.max_len})"
+            )
+        req._order = self._n_submitted
+        self._n_submitted += 1
+        self.pending.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending) or any(s is not None for s in self.slots)
+
+    def warmup(self, prompt_lens) -> None:
+        """Pre-build + warm the prefill graphs for the given prompt lengths
+        (deploy-time shape warming; admission then runs at steady-state)."""
+        for s in sorted(set(int(x) for x in prompt_lens)):
+            self._prefill_exe(s)
+
+    # -- internals -------------------------------------------------------------
+    def _prefill_exe(self, prompt_len: int):
+        exe = self._prefill_exes.get(prompt_len)
+        if exe is None:
+            from repro import api
+
+            tok_spec = {"tokens": jax.ShapeDtypeStruct((1, prompt_len), jnp.int32)}
+            exe = api.compile(
+                make_prefill_step(self.cfg), self.params, self._zero_sub_cache, tok_spec,
+                hw=self.hw, backend="host", pool=self.pool, jit_nodes=True,
+                n_executors=self.pool.n_executors, team_size=self._team_size,
+                name=f"serve_prefill[{self.cfg.name},S={prompt_len}]",
+            )
+            # first-call warmup, same reasoning as the decode graph
+            out = exe(self.params, self._zero_sub_cache,
+                      {"tokens": jnp.zeros((1, prompt_len), jnp.int32)})
+            sample_tokens(out[0], self.cfg.vocab_size, self.scfg.temperature,
+                          jax.random.key(0) if self.scfg.temperature > 0 else None)
+            jax.block_until_ready(out[0])
+            self._prefill_exes[prompt_len] = exe
+        return exe
+
+    def _admit(self, req: Request, slot: int):
+        """Run the request's prefill graph (on the shared pool)."""
+        exe = self._prefill_exe(len(req.prompt))
+        logits, filled = exe(
+            self.params, self._zero_sub_cache,
+            {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]},
+        )
+        return req, slot, logits, filled
+
+    def _install(self, req: Request, slot: int, logits, filled) -> None:
+        """Land a prefilled request in its slot and sample its first token."""
+        self.cache = self._insert(self.cache, filled, jnp.int32(slot))
+        self.slots[slot] = req
+        self._emit(slot, int(self._sample(logits)[0]))
+
+    def _emit(self, slot: int, token: int) -> None:
+        req = self.slots[slot]
+        req.output.append(token)
+        hit_eos = req.eos_id is not None and token == req.eos_id
+        if hit_eos or len(req.output) >= req.max_new_tokens:
+            req.done = True
+            self.completed.append(req)
+            self.slots[slot] = None
+            self.cache = self._evict(self.cache, jnp.int32(slot))
+            self._tokens[slot, 0] = self.scfg.pad_id
+        else:
+            self._tokens[slot, 0] = token
+
+    def _decode_once(self) -> None:
+        logits, self.cache = self._decode_exe(
+            self.params, self.cache, jnp.asarray(self._tokens)
+        )
+        self.n_decode_steps += 1
+        nxt = self._sample(logits)
+        for i in range(self.capacity):
+            if self.slots[i] is not None:
+                self._emit(i, int(nxt[i]))
+
+    # -- the loop --------------------------------------------------------------
+    def step(self) -> bool:
+        """One engine iteration: admit into free slots, one decode step.
+
+        Admission prefills execute concurrently with the decode step on the
+        shared executor pool; their slots join the batch from the *next*
+        step.  Returns whether work remains.
+        """
+        self.n_steps += 1
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        admits: list[tuple[Request, int]] = []
+        while self.pending and free:
+            admits.append((self.pending.popleft(), free.pop(0)))
+        decoding = any(s is not None for s in self.slots)
+
+        if admits and decoding:
+            box: dict = {}
+
+            def prefill_worker() -> None:
+                try:
+                    box["res"] = [self._admit(r, s) for r, s in admits]
+                except BaseException as e:  # noqa: BLE001 — re-raised below
+                    box["err"] = e
+
+            th = threading.Thread(target=prefill_worker, name="serve-prefill")
+            th.start()
+            self._decode_once()
+            th.join()
+            if "err" in box:
+                raise box["err"]
+            self.n_overlapped_prefills += len(admits)
+            for item in box["res"]:
+                self._install(*item)
+        elif admits:
+            for r, s in admits:
+                self._install(*self._admit(r, s))
+        elif decoding:
+            self._decode_once()
+        return self.has_work
+
+    def run(self) -> list[Request]:
+        """Drain pending + active requests; returns them in submit order."""
+        while self.has_work:
+            self.step()
+        done = sorted(self.completed, key=lambda r: r._order)
+        self.completed = []
         return done

@@ -1,4 +1,5 @@
-"""Serving step functions (the ``serve_step`` the decode/long shapes lower).
+"""Serving step functions (the ``serve_step`` the decode/long shapes lower)
+and the shared next-token sampling used by both engines.
 
 ``decode`` shapes lower ONE new token against a KV cache of ``seq_len`` —
 the memory-bandwidth-bound regime; caches are sequence-sharded over the
@@ -8,10 +9,13 @@ from __future__ import annotations
 
 from typing import Callable
 
+import jax
+import jax.numpy as jnp
+
 from repro.configs.base import ModelConfig
 from repro.models import transformer
 
-__all__ = ["make_prefill_step", "make_decode_step"]
+__all__ = ["make_prefill_step", "make_decode_step", "mask_pad_vocab", "sample_tokens"]
 
 
 def make_prefill_step(cfg: ModelConfig) -> Callable:
@@ -27,3 +31,36 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
         return logits, cache
 
     return decode_step
+
+
+def mask_pad_vocab(logits: jax.Array, vocab_size: int) -> jax.Array:
+    """-inf the padded-vocab tail of ``logits[..., vocab_size:]``.
+
+    The model's unembedding spans ``cfg.padded_vocab`` columns (Megatron
+    sharding padding) and the ``vocab_size..padded_vocab`` region carries
+    *random initialized weight* — without this mask both greedy argmax and
+    temperature sampling can emit token ids that do not exist.
+    """
+    if logits.shape[-1] <= vocab_size:
+        return logits
+    mask = jnp.arange(logits.shape[-1]) >= vocab_size
+    return jnp.where(mask, -jnp.inf, logits)
+
+
+def sample_tokens(
+    logits: jax.Array,
+    vocab_size: int,
+    temperature: float,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Next-token ids from last-position logits ``[..., padded_vocab]``.
+
+    Greedy argmax at ``temperature == 0``, else categorical — both over the
+    pad-masked vocabulary, so every emitted id is ``< vocab_size``.
+    """
+    logits = mask_pad_vocab(logits, vocab_size)
+    if temperature > 0:
+        if key is None:
+            raise ValueError("temperature sampling needs a PRNG key")
+        return jax.random.categorical(key, logits / temperature, axis=-1)
+    return jnp.argmax(logits, axis=-1)

@@ -1,0 +1,232 @@
+"""Continuous-batching engine: per-request parity with unbatched greedy
+decode, slot admission/eviction, profiler-bounded config search, and
+multi-graph submission to one executor pool."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api as graphi
+from repro.configs.base import get_config
+from repro.core import KNL7250
+from repro.core.engine import ExecutorPool, HostScheduler
+from repro.core.profiler import enumerate_symmetric_configs, profile
+from repro.models import transformer
+from repro.serve.engine import ContinuousEngine, Request, ServeConfig
+from repro.serve.step import mask_pad_vocab
+
+
+@pytest.fixture(scope="module")
+def model():
+    # padded_vocab (512) > vocab_size (260): the pad-mask is load-bearing
+    cfg = get_config("gemma-2b", smoke=True).reduced(vocab_size=260)
+    params = transformer.init_params(cfg, jax.random.key(3))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def engine(model):
+    cfg, params = model
+    eng = ContinuousEngine(cfg, params, ServeConfig(max_batch=2, max_len=48))
+    yield eng
+    eng.close()
+
+
+def _reference_decode(cfg, params, prompt, n_new):
+    """Unbatched greedy reference (pad-masked argmax)."""
+    cache = transformer.init_cache(cfg, 1, len(prompt) + n_new + 1)
+    logits, cache = transformer.prefill(
+        cfg, params, {"tokens": jnp.asarray(prompt)[None]}, cache)
+    out = []
+    for _ in range(n_new):
+        t = int(jnp.argmax(mask_pad_vocab(logits, cfg.vocab_size), -1)[0])
+        out.append(t)
+        logits, cache = transformer.decode_step(
+            cfg, params, jnp.asarray([[t]], jnp.int32), cache)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# parity: continuous mixed-length decode is bit-identical per request
+# ---------------------------------------------------------------------------
+
+def test_mixed_lengths_bit_identical_to_unbatched(model, engine):
+    """4 mixed-length requests through 2 slots: admission waves, slot reuse,
+    idle-slot garbage — every request must still match unbatched greedy."""
+    cfg, params = model
+    rng = np.random.default_rng(0)
+    lens = [5, 11, 17, 8]
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32) for n in lens]
+    for i, pr in enumerate(prompts):
+        engine.submit(Request(request_id=i, prompt=pr, max_new_tokens=6))
+    done = engine.run()
+    assert [r.request_id for r in done] == [0, 1, 2, 3]      # submit order
+    for r in done:
+        ref = _reference_decode(cfg, params, r.prompt, 6)
+        assert r.output == ref, (r.request_id, r.output, ref)
+        assert all(t < cfg.vocab_size for t in r.output)
+
+
+def test_eos_frees_slot_and_admits_within_one_step(model, engine):
+    cfg, params = model
+    rng = np.random.default_rng(1)
+    pra = rng.integers(1, cfg.vocab_size, size=6).astype(np.int32)
+    prb = rng.integers(1, cfg.vocab_size, size=9).astype(np.int32)
+    prc = rng.integers(1, cfg.vocab_size, size=7).astype(np.int32)
+    ref_a = _reference_decode(cfg, params, pra, 8)
+    eos = ref_a[2]                      # A stops at its 3rd emitted token
+    a = Request(request_id=10, prompt=pra, max_new_tokens=8, eos_id=eos)
+    b = Request(request_id=11, prompt=prb, max_new_tokens=12)
+    c = Request(request_id=12, prompt=prc, max_new_tokens=4)
+    engine.submit(a)
+    engine.submit(b)
+    engine.step()                       # admit A+B (fills both slots)
+    engine.submit(c)                    # queued: no free slot yet
+    assert c in engine.pending
+    while not a.done:
+        engine.step()
+    slot_a = engine.slots.index(None)   # A's slot freed mid-stream
+    assert b in engine.slots
+    engine.step()                       # ONE step: C admitted into A's slot
+    assert engine.slots[slot_a] is c
+    assert not engine.pending
+    done = engine.run()
+    assert [r.request_id for r in done] == [10, 11, 12]
+    # the tiny model may emit eos before step 3 (greedy repetition) — the
+    # contract under test is: stopped ON eos, well before the 8-token budget
+    assert a.output[-1] == eos and len(a.output) <= 3
+    assert b.output == _reference_decode(cfg, params, prb, 12)
+    assert c.output == _reference_decode(cfg, params, prc, 4)
+
+
+def test_temperature_sampling_stays_in_vocab(model):
+    cfg, params = model
+    rng = np.random.default_rng(2)
+    with ContinuousEngine(cfg, params,
+                          ServeConfig(max_batch=2, max_len=24, temperature=1.0)) as eng:
+        for i in range(3):
+            eng.submit(Request(request_id=i,
+                               prompt=rng.integers(1, cfg.vocab_size, size=5).astype(np.int32),
+                               max_new_tokens=8))
+        done = eng.run()
+    emitted = [t for r in done for t in r.output]
+    assert emitted and all(0 <= t < cfg.vocab_size for t in emitted)
+
+
+def test_submit_over_budget_raises(engine):
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        engine.submit(Request(request_id=0, prompt=np.ones(40, np.int32),
+                              max_new_tokens=40))
+
+
+def test_rejects_encoder_frontends(model):
+    cfg, params = model
+    bad = cfg.reduced(frontend="audio")
+    with pytest.raises(ValueError, match="decoder-only"):
+        ContinuousEngine(bad, params, ServeConfig(max_batch=2, max_len=16))
+
+
+# ---------------------------------------------------------------------------
+# profiler: max_executors bounds the config search
+# ---------------------------------------------------------------------------
+
+def _diamond():
+    from repro.core import Graph
+
+    g = Graph("diamond")
+    g.add_op("a", flops=1e9)
+    g.add_op("b", flops=2e9, deps=("a",))
+    g.add_op("c", flops=3e9, deps=("a",))
+    g.add_op("d", flops=4e9, deps=("b", "c"))
+    return g
+
+
+def test_enumerate_configs_respects_max_executors():
+    bounded = enumerate_symmetric_configs(64, max_executors=4)
+    assert bounded == [(1, 64), (2, 32), (4, 16)]
+    assert enumerate_symmetric_configs(64)[-1][0] > 4
+
+
+def test_profile_respects_max_executors():
+    res = profile(_diamond(), KNL7250, n_workers=32, max_executors=2)
+    assert all(n <= 2 for n, _ in res.config_makespans)
+    assert res.best_n_executors <= 2
+
+
+def test_profile_with_threads_max_executors():
+    exe = graphi.compile(_diamond(), hw=KNL7250, backend="sim")
+    unbounded = exe.profile
+    assert any(n > 2 for n, _ in unbounded.config_makespans)
+    bounded = exe.profile_with(max_executors=2)
+    assert all(n <= 2 for n, _ in bounded.config_makespans)
+    assert exe.profile is bounded                      # re-cached
+
+
+def test_engine_honors_max_executors(model):
+    cfg, params = model
+    with ContinuousEngine(cfg, params, ServeConfig(max_batch=2, max_len=16),
+                          max_executors=2) as eng:
+        assert eng.pool.n_executors <= 2
+        assert all(n <= 2 for n, _ in eng.profile.config_makespans)
+
+
+# ---------------------------------------------------------------------------
+# ExecutorPool: multiple graphs share one pool
+# ---------------------------------------------------------------------------
+
+def _chain(name, k, base):
+    from repro.core import Graph
+
+    g = Graph(name)
+    g.add_op("x0", flops=1.0, fn=lambda: base)
+    for i in range(1, k):
+        g.add_op(f"x{i}", deps=(f"x{i-1}",), flops=1.0, fn=lambda v: v + 1)
+    return g
+
+
+def test_two_graphs_run_concurrently_on_one_pool():
+    with ExecutorPool(2) as pool:
+        outs = {}
+
+        def run(name, base):
+            g = _chain(name, 6, base)
+            outs[name] = HostScheduler(g, 2, pool=pool).run().outputs["x5"]
+
+        ts = [threading.Thread(target=run, args=(f"g{i}", 100 * i)) for i in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert outs == {"g0": 5, "g1": 105}
+        # the pool survives its runs: a third graph still executes
+        g = _chain("g2", 3, 7)
+        assert HostScheduler(g, 2, pool=pool).run().outputs["x2"] == 9
+
+
+def test_pool_survives_a_failing_graph():
+    from repro.core import Graph
+
+    with ExecutorPool(1) as pool:
+        bad = Graph("bad")
+        bad.add_op("a", flops=1.0, fn=lambda: 1)
+        bad.add_op("b", deps=("a",), flops=1.0,
+                   fn=lambda v: (_ for _ in ()).throw(ValueError("boom")))
+        with pytest.raises(RuntimeError, match="'b' failed"):
+            HostScheduler(bad, 1, pool=pool).run()
+        # the executor thread relayed the exception and kept serving
+        g = _chain("ok", 3, 1)
+        assert HostScheduler(g, 1, pool=pool).run().outputs["x2"] == 3
+
+
+def test_executable_reuses_pool(model):
+    def f(x):
+        return jnp.tanh(x) @ x + 1.0
+
+    x = jnp.ones((16, 16))
+    with ExecutorPool(2) as pool:
+        exe = graphi.compile(f, x, backend="host", pool=pool)
+        out1 = exe(x)
+        out2 = exe(x)
+    assert jnp.allclose(out1, f(x)) and jnp.allclose(out2, f(x))

@@ -1,4 +1,5 @@
-"""Wave-batching serving engine: batching-invariance, stop conditions."""
+"""Wave-batching serving engine: batching-invariance, stop conditions,
+pad-vocab sampling mask, submit-order contract."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +8,7 @@ import pytest
 from repro.configs.base import get_config
 from repro.models import transformer
 from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.step import mask_pad_vocab
 
 
 @pytest.fixture(scope="module")
@@ -67,6 +69,75 @@ def test_eos_stops_early(model):
     eng.submit(Request(request_id=0, prompt=pr, max_new_tokens=8, eos_id=eos))
     (r,) = eng.run()
     assert r.done and r.output[-1] == eos and len(r.output) <= 3 + ref[:3].count(eos)
+
+
+def test_run_returns_true_submit_order(model):
+    """Docstring promises submit order — request_ids need not be monotone."""
+    cfg, params = model
+    rng = np.random.default_rng(5)
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_len=48))
+    ids, lens = [7, 2, 9], [12, 5, 12]   # mixed lengths: bucketing reorders
+    for rid, ln in zip(ids, lens):
+        eng.submit(Request(request_id=rid,
+                           prompt=rng.integers(1, cfg.vocab_size, size=ln).astype(np.int32),
+                           max_new_tokens=3))
+    done = eng.run()
+    assert [r.request_id for r in done] == ids
+
+
+def test_submit_over_budget_raises_valueerror(model):
+    cfg, params = model
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=1, max_len=16))
+    req = Request(request_id=0, prompt=np.ones(10, np.int32), max_new_tokens=10)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.submit(req)
+
+
+# ---------------------------------------------------------------------------
+# pad-vocab regression: padded_vocab > vocab_size carries random weight
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def padded_model():
+    cfg = get_config("gemma-2b", smoke=True).reduced(vocab_size=260)
+    assert cfg.padded_vocab > cfg.vocab_size     # 260 -> 512: 252 junk columns
+    params = transformer.init_params(cfg, jax.random.key(7))
+    return cfg, params
+
+
+@pytest.mark.parametrize("temperature", [0.0, 1.0])
+def test_emitted_ids_stay_in_vocab(padded_model, temperature):
+    """Greedy and temperature sampling must never emit ids >= vocab_size,
+    even though ~half the unembedding columns are pad junk."""
+    cfg, params = padded_model
+    rng = np.random.default_rng(11)
+    eng = ServeEngine(cfg, params,
+                      ServeConfig(max_batch=3, max_len=32, temperature=temperature))
+    for i in range(3):
+        eng.submit(Request(request_id=i,
+                           prompt=rng.integers(1, cfg.vocab_size, size=6).astype(np.int32),
+                           max_new_tokens=12))
+    done = eng.run()
+    emitted = [t for r in done for t in r.output]
+    assert emitted and all(0 <= t < cfg.vocab_size for t in emitted), emitted
+
+
+def test_greedy_matches_masked_reference(padded_model):
+    """The mask must only remove pad columns — in-vocab argmax is untouched."""
+    cfg, params = padded_model
+    rng = np.random.default_rng(12)
+    pr = rng.integers(1, cfg.vocab_size, size=8).astype(np.int32)
+    cache = transformer.init_cache(cfg, 1, 24)
+    logits, cache = transformer.prefill(cfg, params, {"tokens": jnp.asarray(pr)[None]}, cache)
+    ref = []
+    for _ in range(4):
+        t = int(jnp.argmax(mask_pad_vocab(logits, cfg.vocab_size), -1)[0])
+        ref.append(t)
+        logits, cache = transformer.decode_step(cfg, params, jnp.asarray([[t]], jnp.int32), cache)
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=1, max_len=24))
+    eng.submit(Request(request_id=0, prompt=pr, max_new_tokens=4))
+    (r,) = eng.run()
+    assert r.output == ref
 
 
 def test_budget_respected_and_queue_drains(model):
