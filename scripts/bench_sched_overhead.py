@@ -1,0 +1,175 @@
+"""Scheduler-overhead bench: dynamic HostScheduler vs compiled static host
+plans (CI artifact: BENCH_sched.json).
+
+Two legs, one persistent :class:`ExecutorPool` each:
+
+1. **Decode-graph microbench** — a decode-shaped DAG (L layers of W
+   parallel ops feeding a join) with ~free op fns, replayed R times through
+   both runtimes.  With op cost ~0, wall time per op *is* per-op scheduling
+   overhead: the dynamic path pays heap pushes, a placement decision, and
+   two queue hops per op; the static plan pays a counter bump per edge and
+   a queue hop only on cross-executor edges.
+2. **Serve decode step** — the captured tiny-transformer decode graph
+   (``jit_nodes=True``, the ContinuousEngine configuration); per-token step
+   wall time, dynamic vs static, same Executable, same pool.
+
+    PYTHONPATH=src python scripts/bench_sched_overhead.py [--out BENCH_sched.json]
+
+Gates (the ISSUE acceptance criteria):
+  * microbench: static per-op overhead >= 1.5x lower than dynamic;
+  * every measured static run is bit-identical to the sequential
+    ``Graph.execute`` oracle;
+  * decode step: static is no slower than dynamic.
+"""
+import argparse
+import json
+import statistics
+import time
+
+from repro.core import KNL7250, compile_host_plan, make_schedule
+from repro.core.engine import ExecutorPool, HostScheduler
+from repro.core.static_host import layered_graph
+
+
+def gate(cond, msg):
+    """Acceptance gate that survives ``python -O`` (no bare asserts)."""
+    if not cond:
+        raise SystemExit(f"GATE FAILED: {msg}")
+
+
+def bench_micro(repeats: int, n_exec: int) -> dict:
+    g = layered_graph(L=24, W=4)
+    oracle = g.execute({"x": 1.0})
+    sched = make_schedule(g, KNL7250, n_executors=n_exec, team_size=1)
+    plan = compile_host_plan(g, sched)
+    n_ops = plan.n_ops
+    with ExecutorPool(n_exec) as pool:
+        host = HostScheduler(g, n_exec, costs=sched.op_costs, pool=pool)
+        for _ in range(5):                              # warmup both paths
+            host.run({"x": 1.0})
+            plan.run({"x": 1.0}, pool=pool)
+        dyn: list[float] = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = host.run({"x": 1.0})
+            dyn.append(time.perf_counter() - t0)
+        gate(res.outputs == oracle, "dynamic run diverged from the oracle")
+        stat: list[float] = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = plan.run({"x": 1.0}, pool=pool)
+            stat.append(time.perf_counter() - t0)
+            gate(res.outputs == oracle,
+                 "static run not bit-identical to Graph.execute")
+    dyn_op = statistics.median(dyn) / n_ops
+    stat_op = statistics.median(stat) / n_ops
+    return {
+        "bench": "decode_micro",
+        "n_ops": n_ops,
+        "n_executors": n_exec,
+        "repeats": repeats,
+        "dynamic_per_op_us": round(dyn_op * 1e6, 3),
+        "static_per_op_us": round(stat_op * 1e6, 3),
+        "overhead_ratio_x": round(dyn_op / stat_op, 3),
+    }
+
+
+def bench_decode_step(steps: int) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import api
+    from repro.configs.base import get_config
+    from repro.models import transformer
+    from repro.serve.step import make_decode_step
+
+    cfg = get_config("gemma-2b", smoke=True).reduced(vocab_size=128)
+    params = transformer.init_params(cfg, jax.random.key(0))
+    B, max_len = 4, 32
+    cache = transformer.init_cache(cfg, B, max_len, per_slot=True)
+    toks = jnp.ones((B, 1), jnp.int32)
+    exe = api.compile(
+        make_decode_step(cfg), params, cache, jnp.asarray(toks),
+        hw=KNL7250, backend="host", jit_nodes=True, name="bench_decode",
+    )
+    # profile-guided config + plan, exactly as the serve engine builds them:
+    # measured per-op costs (calibrate jit-warms every node fn) drive the
+    # executor-count search and the schedule the static plan freezes
+    exe.calibrate(params, cache, toks)
+    n_exec = exe.planned_executors
+    inputs = exe.captured.bind((params, cache, toks))
+    walls: dict[str, list[float]] = {"dynamic": [], "static": []}
+    outs = {}
+    with ExecutorPool(n_exec) as pool:
+        exe.pool = pool
+        for mode in walls:                                      # warmup
+            res = exe.execute_host(inputs, host_mode=mode)
+            jax.block_until_ready(res.outputs)
+        # interleave the modes so background-load drift on a shared box
+        # hits both equally instead of biasing whichever ran second
+        for _ in range(steps):
+            for mode in walls:
+                t0 = time.perf_counter()
+                res = exe.execute_host(inputs, host_mode=mode)
+                jax.block_until_ready(res.outputs)
+                walls[mode].append(time.perf_counter() - t0)
+                outs[mode] = jax.tree.leaves(
+                    exe.captured.unflatten(res.outputs))
+        gate(all(np.array_equal(np.asarray(a), np.asarray(b))
+                 for a, b in zip(outs["static"], outs["dynamic"])),
+             "decode step output diverged between static and dynamic modes")
+    dyn = statistics.median(walls["dynamic"])
+    stat = statistics.median(walls["static"])
+    return {
+        "bench": "serve_decode_step",
+        "arch": cfg.name,
+        "n_nodes": len(exe.graph),
+        "n_ops": exe.host_plan(n_exec).n_ops,
+        "n_executors": n_exec,
+        "steps": steps,
+        "dynamic_step_ms": round(dyn * 1e3, 3),
+        "static_step_ms": round(stat * 1e3, 3),
+        "speedup_x": round(dyn / stat, 3),
+    }
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="BENCH_sched.json")
+    p.add_argument("--repeats", type=int, default=40)
+    p.add_argument("--steps", type=int, default=30)
+    p.add_argument("--executors", type=int, default=4)
+    args = p.parse_args()
+
+    t0 = time.time()
+    micro = bench_micro(args.repeats, args.executors)
+    step = bench_decode_step(args.steps)
+    payload = {"total_wall_s": round(time.time() - t0, 2), "rows": [micro, step]}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+
+    print(f"{micro['bench']:18s} dyn={micro['dynamic_per_op_us']:8.2f}us/op "
+          f"static={micro['static_per_op_us']:8.2f}us/op "
+          f"ratio={micro['overhead_ratio_x']:.2f}x")
+    print(f"{step['bench']:18s} dyn={step['dynamic_step_ms']:8.2f}ms/tok "
+          f"static={step['static_step_ms']:8.2f}ms/tok "
+          f"speedup={step['speedup_x']:.2f}x")
+    print(f"wrote {args.out} ({payload['total_wall_s']}s)")
+
+    # ISSUE gates: static must cut per-op scheduling overhead >= 1.5x on the
+    # decode-graph microbench and must not slow the real decode step down
+    gate(micro["overhead_ratio_x"] >= 1.5,
+         f"static per-op overhead only {micro['overhead_ratio_x']}x lower "
+         f"than dynamic (need >= 1.5x)")
+    # real compute dominates the decode step, so the overhead win shrinks to
+    # its scheduling share; gate it as a no-regression guard with tolerance
+    # for shared-runner noise (the hard >= 1.5x gate is the microbench's)
+    gate(step["static_step_ms"] <= 1.1 * step["dynamic_step_ms"],
+         f"static decode step {step['static_step_ms']}ms regressed vs dynamic "
+         f"{step['dynamic_step_ms']}ms (> 10%)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

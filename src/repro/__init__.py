@@ -36,6 +36,9 @@ _EXPORTS = {
     "HostScheduler": "repro.core.engine",
     "HostRunResult": "repro.core.engine",
     "GraphiEngine": "repro.core.engine",
+    # compiled static host plans (host_mode="static")
+    "StaticHostPlan": "repro.core.static_host",
+    "compile_host_plan": "repro.core.static_host",
 }
 
 __all__ = sorted(_EXPORTS)

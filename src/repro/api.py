@@ -36,13 +36,15 @@ from repro.core.capture import CapturedGraph, capture
 from repro.core.cost_model import KNL7250, HardwareModel, sequential_makespan
 from repro.core.engine import ExecutorPool, HostRunResult, HostScheduler
 from repro.core.graph import Graph
-from repro.core.profiler import ProfileResult, profile
+from repro.core.profiler import ProfileResult, measure_op_costs, profile
 from repro.core.scheduler import Schedule, make_schedule, slot_assignment
 from repro.core.simulate import SimConfig, SimResult, simulate
+from repro.core.static_host import StaticHostPlan, compile_host_plan
 
 __all__ = ["Executable", "compile", "serve_engine"]
 
 _BACKENDS = ("host", "sim", "mesh")
+_HOST_MODES = ("dynamic", "static")
 
 
 class Executable:
@@ -67,9 +69,13 @@ class Executable:
         team_size: int | None = None,
         mesh: Any = None,
         pool: ExecutorPool | None = None,
+        host_mode: str = "dynamic",
     ):
         if backend not in _BACKENDS:
             raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
+        if host_mode not in _HOST_MODES:
+            raise ValueError(
+                f"host_mode must be one of {_HOST_MODES}, got {host_mode!r}")
         self._graph = graph
         self.hw = hw
         self.captured = captured
@@ -80,8 +86,14 @@ class Executable:
         self._pin = (n_executors, team_size)
         self.mesh = mesh
         self.pool = pool
+        self.host_mode = host_mode
         self._host: HostScheduler | None = None
         self._host_key: tuple | None = None
+        self._host_plans: dict[int, StaticHostPlan] = {}
+        self._auto_pool: ExecutorPool | None = None
+        self._measured: Any = None   # measured_costs fn from the last profile
+        self._planned: int | None = None   # cached default executor count
+        self._n_real: int | None = None    # cached non-input node count
         self._profile: ProfileResult | None = None
         self._schedule: Schedule | None = None
         self._slots: list[list[str]] | None = None
@@ -109,12 +121,26 @@ class Executable:
 
     def profile_with(self, **kw: Any) -> ProfileResult:
         """Re-run the configuration search with profiler kwargs
-        (``extra_configs=``, ``measured_costs=``, ...) and cache the result."""
+        (``extra_configs=``, ``measured_costs=``, ...) and cache the result.
+
+        ``measured_costs`` sticks: subsequent schedules (and the static
+        host plans frozen from them) — and later ``profile_with`` calls —
+        use the measured table instead of the analytic cost model, so the
+        config search and the frozen placements always agree on one cost
+        model.  Pass ``measured_costs=None`` to revert."""
+        if "measured_costs" in kw:
+            self._measured = kw["measured_costs"]
+        elif self._measured is not None:
+            kw = {**kw, "measured_costs": self._measured}
         self._profile = profile(
             self._graph, self.hw, n_workers=self.usable_workers, policy=self.policy, **kw
         )
         self._schedule = None
         self._slots = None
+        self._host = None           # dynamic CPF priorities follow the costs
+        self._host_key = None
+        self._host_plans.clear()    # plans froze the invalidated schedule
+        self._planned = None        # best executor count may have moved
         return self._profile
 
     @property
@@ -129,8 +155,10 @@ class Executable:
             p = self.profile
             n_exec = n_exec or p.best_n_executors
             team = team or p.best_team_size
+        costs = dict(self._measured(team)) if self._measured is not None else None
         return make_schedule(
-            self._graph, self.hw, n_executors=n_exec, team_size=team, policy=policy
+            self._graph, self.hw, n_executors=n_exec, team_size=team,
+            policy=policy, costs=costs,
         )
 
     @property
@@ -143,6 +171,41 @@ class Executable:
     @property
     def critical_path(self) -> tuple[float, list[str]]:
         return self._graph.critical_path(self.schedule.op_costs)
+
+    def calibrate(
+        self,
+        *args: Any,
+        inputs: Mapping[str, Any] | None = None,
+        warmup: int = 1,
+        iters: int = 3,
+        max_executors: int | None = None,
+    ) -> ProfileResult:
+        """Profile-guided replanning: time every node ``fn`` on concrete
+        values (the paper's first-iterations profiling) and re-run the
+        configuration search with the measured table.  Subsequent schedules
+        — and the static host plans frozen from them — place ops by how
+        long they *actually* take, not by the analytic cost model, which
+        misranks tiny jitted ops whose cost is dispatch, not flops.
+
+        Pass the executable's call args (captured graphs) or a name→value
+        mapping via ``inputs``.  Node fns should be warm (run the
+        executable once first) so compile time is not measured.
+        """
+        import jax
+
+        if args:
+            if self.captured is None:
+                raise TypeError("calibrate(*args) needs a captured graph; "
+                                "pass inputs= for raw graphs")
+            inputs = self.captured.bind(args)
+        costs = measure_op_costs(
+            self._graph, inputs, warmup=warmup, iters=iters,
+            block=jax.block_until_ready,
+        )
+        kw: dict[str, Any] = {"measured_costs": lambda _team: costs}
+        if max_executors is not None:
+            kw["max_executors"] = max_executors
+        return self.profile_with(**kw)
 
     def simulate(self, **kw: Any) -> SimResult:
         p = self.profile
@@ -193,6 +256,13 @@ class Executable:
     # -- execution ----------------------------------------------------------
     def _host_executors(self, n_executors: int | None = None) -> int:
         explicit = n_executors if n_executors is not None else self._pin[0]
+        if explicit is None and self._planned is not None:
+            return self._planned    # O(1) on the per-step decode hot path
+        if self._n_real is None:
+            # input passthroughs resolve inline in the scheduler — only
+            # real ops occupy executor threads
+            self._n_real = sum(
+                1 for nd in self._graph.nodes if nd.kind != "input")
         if explicit is not None:
             n = explicit
         else:
@@ -203,30 +273,93 @@ class Executable:
             # explicitly requested count is honored as-is
             if self._graph.width() >= 2:
                 n = max(n, 2)
-        # input passthroughs resolve inline in the scheduler — only real
-        # ops occupy executor threads
-        n_real = sum(1 for nd in self._graph.nodes if nd.kind != "input")
-        return min(n, max(1, n_real))
+        n = min(n, max(1, self._n_real))
+        if explicit is None:
+            self._planned = n
+        return n
 
     @property
     def planned_executors(self) -> int:
         """Executor-thread count the host backend will actually use."""
         return self._host_executors()
 
+    def host_plan(self, n_executors: int | None = None) -> StaticHostPlan:
+        """The compiled static host plan, cached per (graph, n_executors).
+
+        Freezes the CPF schedule into per-executor integer-id programs
+        (``core.static_host``); when the requested width differs from the
+        cached schedule's config, a schedule is made for exactly that width
+        (same policy and team size) rather than folding executors.  The
+        default width is the *planned* executor count, capped at the bound
+        pool's size — never widened to fill a larger shared pool: a plan
+        frozen wider than the profiled config pays cross-executor wakeups
+        the calibration chose to avoid.
+        """
+        if n_executors is None:
+            n_executors = self._host_executors()
+            if self.pool is not None:
+                n_executors = min(n_executors, self.pool.n_executors)
+        plan = self._host_plans.get(n_executors)
+        if plan is None:
+            sched = self.schedule
+            if sched.n_executors != n_executors:
+                costs = (dict(self._measured(sched.team_size))
+                         if self._measured is not None else None)
+                sched = make_schedule(
+                    self._graph, self.hw, n_executors=n_executors,
+                    team_size=sched.team_size, policy=self.policy, costs=costs,
+                )
+            plan = compile_host_plan(self._graph, sched, n_executors=n_executors)
+            self._host_plans[n_executors] = plan
+        return plan
+
     def execute_host(
         self,
         inputs: Mapping[str, Any] | None = None,
         n_executors: int | None = None,
         pool: ExecutorPool | None = None,
+        *,
+        host_mode: str | None = None,
+        plan: StaticHostPlan | None = None,
+        collect_trace: bool = False,
     ) -> HostRunResult:
-        """Run the dynamic host runtime on a name→value input mapping.
+        """Run the host runtime on a name→value input mapping.
 
         With a ``pool`` (given here or at compile time) the run submits to
         those persistent executors — a serving decode loop reuses one
         HostScheduler instead of paying thread startup per step — and the
         pool's size wins over the planned executor count.
+
+        ``host_mode`` overrides the compile-time knob for this run:
+        ``"static"`` executes the cached :meth:`host_plan` (lock-free
+        dependency counters, no per-op scheduler round-trip) and is the
+        right mode for a graph replayed many times; ``"dynamic"`` is the
+        paper-faithful centralized scheduler.  An explicit ``plan`` forces
+        static execution of exactly that plan.  ``collect_trace`` turns on
+        per-op timestamps for static runs (dynamic runs always trace).
         """
         pool = pool if pool is not None else self.pool
+        mode = host_mode if host_mode is not None else self.host_mode
+        if mode not in _HOST_MODES:
+            raise ValueError(
+                f"host_mode must be one of {_HOST_MODES}, got {mode!r}")
+        if plan is not None or mode == "static":
+            if plan is None:
+                n = self._host_executors(n_executors)
+                if pool is not None:
+                    n = min(n, pool.n_executors)
+                plan = self.host_plan(n)
+            if pool is None:
+                # own a persistent pool rather than spinning threads up and
+                # down per call — replayed static graphs are the whole point
+                pool = self._auto_pool
+                if pool is None or pool.n_executors < plan.n_executors:
+                    if pool is not None:
+                        pool.close()
+                    pool = self._auto_pool = ExecutorPool(plan.n_executors)
+            res = plan.run(inputs, pool=pool, collect_trace=collect_trace)
+            self.last_run = res
+            return res
         n = self._host_executors(n_executors)
         key = (n, id(pool))
         if self._host is None or self._host_key != key:
@@ -237,6 +370,21 @@ class Executable:
         res = self._host.run(inputs)
         self.last_run = res
         return res
+
+    def close(self) -> None:
+        """Release the executable's own executor pool (static runs without a
+        shared ``pool`` keep one alive between calls).  Pool threads are
+        daemons, so skipping this never hangs interpreter exit; an
+        externally provided pool is the caller's to close."""
+        if self._auto_pool is not None:
+            self._auto_pool.close()
+            self._auto_pool = None
+
+    def __enter__(self) -> "Executable":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
 
     def __call__(self, *args: Any) -> Any:
         if self.backend == "sim":
@@ -298,6 +446,7 @@ def compile(
     jit_nodes: bool = False,
     mesh: Any = None,
     pool: ExecutorPool | None = None,
+    host_mode: str = "dynamic",
 ) -> Executable:
     """Turn a JAX function (or a pre-built :class:`Graph`) into a scheduled
     :class:`Executable`.
@@ -310,7 +459,11 @@ def compile(
     and decode graphs submitting to the same executors).  ``jit_nodes``
     wraps every node ``fn`` in ``jax.jit`` — one compiled XLA call per node
     instead of eager per-equation dispatch, the right trade for graphs
-    executed thousands of times (a serving decode loop).
+    executed thousands of times (a serving decode loop).  ``host_mode``
+    picks the host-backend runtime: ``"dynamic"`` (paper-faithful
+    centralized scheduler) or ``"static"`` (compiled
+    :class:`~repro.core.static_host.StaticHostPlan` — per-op scheduling
+    overhead amortized to ~zero, the right mode for replayed graphs).
     """
     captured: CapturedGraph | None = None
     if isinstance(target, CapturedGraph):
@@ -339,6 +492,7 @@ def compile(
         team_size=team_size,
         mesh=mesh,
         pool=pool,
+        host_mode=host_mode,
     )
 
 
@@ -375,7 +529,9 @@ def serve_engine(
     per-request slot admission.  ``continuous=False`` returns the
     length-bucketed wave :class:`~repro.serve.engine.ServeEngine`.
     Extra kwargs go to the engine constructor — ``rng_seed=`` for either
-    engine; ``hw=``, ``max_executors=``, ``pool=`` are continuous-only.
+    engine; ``hw=``, ``max_executors=``, ``pool=``, and
+    ``decode_host_mode=`` ("static" default: the fixed decode graph runs a
+    compiled host plan) are continuous-only.
     """
     from repro.serve.engine import ContinuousEngine, ServeConfig, ServeEngine
 

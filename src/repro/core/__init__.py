@@ -18,6 +18,7 @@ from .graph import Graph, GraphValidationError, OpNode
 from .profiler import ProfileResult, enumerate_symmetric_configs, measure_op_costs, profile
 from .scheduler import Schedule, make_schedule, slot_assignment
 from .simulate import SimConfig, SimResult, TraceEvent, simulate
+from .static_host import StaticHostPlan, compile_host_plan
 from .trace import ascii_timeline, trace_csv
 from .wavefront import (
     diagonals,
@@ -44,8 +45,10 @@ __all__ = [
     "Schedule",
     "SimConfig",
     "SimResult",
+    "StaticHostPlan",
     "TraceEvent",
     "ascii_timeline",
+    "compile_host_plan",
     "trace_csv",
     "diagonals",
     "enumerate_symmetric_configs",

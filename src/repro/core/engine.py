@@ -62,6 +62,7 @@ class ExecutorPool:
         # SimpleQueue: C-level put/get, ~3x cheaper per hop than Queue —
         # the decode loop pays one round-trip per chained node per step
         self._buffers: list[queue.SimpleQueue] = [queue.SimpleQueue() for _ in range(n_executors)]
+        self._segment_lock = threading.Lock()
         self._closed = False
         self._threads = [
             threading.Thread(target=self._worker, args=(e,), daemon=True,
@@ -82,6 +83,26 @@ class ExecutorPool:
         if self._closed:
             raise RuntimeError("ExecutorPool is closed")
         self._buffers[ex].put((name, task, reply, t_origin))
+
+    def submit_segments(
+        self,
+        items: list[tuple[int, str, Callable[[], Any]]],
+        reply: queue.SimpleQueue,
+        t_origin: float,
+    ) -> None:
+        """Queue one static-plan segment per executor, atomically.
+
+        Segments (``repro.core.static_host``) block-wait for their peers, so
+        two plans whose segment batches interleaved in opposite orders on two
+        buffers would deadlock — the lock makes every batch land in the same
+        relative order on every buffer.  Dynamic ops may interleave freely:
+        they never wait inside an executor thread.
+        """
+        if self._closed:
+            raise RuntimeError("ExecutorPool is closed")
+        with self._segment_lock:
+            for ex, name, task in items:
+                self._buffers[ex].put((name, task, reply, t_origin))
 
     def qsize(self, ex: int) -> int:
         """Approximate queued depth on one executor (cross-run load signal)."""
@@ -163,18 +184,31 @@ class HostScheduler:
         costs = costs or {n: max(g.flops, 1.0) for n, g in zip(graph.names, graph.nodes)}
         self.levels = graph.levels({n: float(costs[n]) for n in graph.names})
         self.buffer_depth = buffer_depth
+        # per-graph immutables, hoisted: repeated run() calls on one
+        # scheduler (the decode loop) must not rebuild these every step
+        names = graph.names
+        seq = {n: i for i, n in enumerate(names)}
+        self._indeg0 = {n: graph.in_degree(n) for n in names}
+        self._entry = {n: (-self.levels[n], seq[n], n) for n in names}
+        self._ready0 = sorted(self._entry[n] for n in names if self._indeg0[n] == 0)
+        self._total = len(graph)
 
     def run(self, inputs: Mapping[str, Any] | None = None) -> HostRunResult:
         g = self.graph
+        if len(g) != self._total:
+            # the per-graph immutables above were hoisted to __init__; a
+            # node added since would silently never execute
+            raise RuntimeError(
+                f"graph {g.name!r} grew from {self._total} to {len(g)} nodes "
+                "after HostScheduler construction — build a new scheduler"
+            )
         inputs = dict(inputs or {})
         results: dict[str, Any] = {}
-        indeg = {n: g.in_degree(n) for n in g.names}
-        seq = {n: i for i, n in enumerate(g.names)}
+        indeg = dict(self._indeg0)
+        entry = self._entry
+        successors = g.successors
 
-        ready: list[tuple[float, int, str]] = []
-        for n in g.names:
-            if indeg[n] == 0:
-                heapq.heappush(ready, (-self.levels[n], seq[n], n))
+        ready: list[tuple[float, int, str]] = list(self._ready0)  # sorted => heap
 
         n_exec = self.n_executors
         pool = self.pool
@@ -185,12 +219,20 @@ class HostScheduler:
         # queues stay unbounded — shutdown puts never block on a full buffer
         triggered: queue.SimpleQueue = queue.SimpleQueue()
         inflight = [0] * n_exec
+        depth = self.buffer_depth
+        # idle-executor heap keyed (inflight, qsize-at-push, e): replaces the
+        # O(n_exec) min(...) scan per dispatched op.  Entries go stale when
+        # inflight changes; stale entries are discarded (and re-keyed) on
+        # pop, so total heap traffic stays O(ops log n_exec).
+        idle: list[tuple[int, int, int]] = sorted(
+            (0, pool.qsize(e), e) for e in range(n_exec)
+        )
         peak_inflight = 0
         trace: list[TraceEvent] = []
         t_origin = time.perf_counter()
 
         n_done = 0
-        total = len(g)
+        total = self._total
 
         def dispatch() -> None:
             """Fire ready ops highest-level-first at the least-loaded
@@ -207,14 +249,23 @@ class HostScheduler:
                     heapq.heappop(ready)
                     results[name] = inputs[name]
                     n_done += 1
-                    for s in g.successors(name):
+                    for s in successors(name):
                         indeg[s] -= 1
                         if indeg[s] == 0:
-                            heapq.heappush(ready, (-self.levels[s], seq[s], s))
+                            heapq.heappush(ready, entry[s])
                     continue
-                ex = min(range(n_exec), key=lambda e: (inflight[e], pool.qsize(e), e))
-                if inflight[ex] >= self.buffer_depth:
-                    return
+                ex = -1
+                while idle:
+                    inf, _, e = idle[0]
+                    if inf == inflight[e] and inf < depth:
+                        ex = e
+                        heapq.heappop(idle)
+                        break
+                    heapq.heappop(idle)  # stale: re-key if still usable
+                    if inflight[e] < depth:
+                        heapq.heappush(idle, (inflight[e], pool.qsize(e), e))
+                if ex < 0:
+                    return          # every buffer is full
                 heapq.heappop(ready)
                 if node.fn is None:
                     # no fn and no input: raises in the executor and is
@@ -223,6 +274,8 @@ class HostScheduler:
                 else:
                     task = partial(node.fn, *(results[d] for d in node.deps))
                 inflight[ex] += 1
+                if inflight[ex] < depth:
+                    heapq.heappush(idle, (inflight[ex], pool.qsize(ex), ex))
                 peak_inflight = max(peak_inflight, inflight[ex])
                 pool.submit(ex, name, task, triggered, t_origin)
 
@@ -246,12 +299,13 @@ class HostScheduler:
                         ) from out
                     results[name] = out
                     inflight[ex] -= 1
+                    heapq.heappush(idle, (inflight[ex], pool.qsize(ex), ex))
                     trace.append(TraceEvent(name, ex, t0, t1))
                     n_done += 1
-                    for s in g.successors(name):
+                    for s in successors(name):
                         indeg[s] -= 1
                         if indeg[s] == 0:
-                            heapq.heappush(ready, (-self.levels[s], seq[s], s))
+                            heapq.heappush(ready, entry[s])
                 dispatch()
         finally:
             if ephemeral:

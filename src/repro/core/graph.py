@@ -49,6 +49,7 @@ class Graph:
         self.name = name
         self._nodes: dict[str, OpNode] = {}
         self._succs: dict[str, list[str]] = {}
+        self._succ_tuples: dict[str, tuple[str, ...]] = {}
 
     # -- construction ------------------------------------------------------
     def add(self, node: OpNode) -> OpNode:
@@ -63,6 +64,7 @@ class Graph:
         self._succs[node.name] = []
         for d in node.deps:
             self._succs[d].append(node.name)
+            self._succ_tuples.pop(d, None)   # invalidate the cached view
         return node
 
     def add_op(self, name: str, **kw: Any) -> OpNode:
@@ -87,11 +89,21 @@ class Graph:
     def names(self) -> list[str]:
         return list(self._nodes)
 
-    def successors(self, name: str) -> list[str]:
-        return list(self._succs[name])
+    def successors(self, name: str) -> tuple[str, ...]:
+        """Consumers of ``name`` as a cached immutable tuple.
 
-    def predecessors(self, name: str) -> list[str]:
-        return list(self._nodes[name].deps)
+        Hit once per op per run by every runtime (dynamic scheduler,
+        simulator, plan compiler) — a fresh list copy per call was pure
+        per-op overhead.  The cache invalidates on :meth:`add`.
+        """
+        t = self._succ_tuples.get(name)
+        if t is None:
+            t = self._succ_tuples[name] = tuple(self._succs[name])
+        return t
+
+    def predecessors(self, name: str) -> tuple[str, ...]:
+        """Dependencies of ``name`` — the node's own (immutable) dep tuple."""
+        return self._nodes[name].deps
 
     def in_degree(self, name: str) -> int:
         return len(self._nodes[name].deps)

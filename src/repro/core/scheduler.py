@@ -31,6 +31,19 @@ class Schedule:
     def start_order(self) -> list[str]:
         return sorted(self.placements, key=lambda n: (self.placements[n][1], n))
 
+    def by_executor(self, n_executors: int | None = None) -> list[list[str]]:
+        """Per-executor op names in start order — the frozen placement view
+        the static host plan compiler consumes.  ``n_executors`` folds the
+        schedule onto fewer executors (``e % n``) when the pool a plan will
+        run on is narrower than the scheduled config."""
+        n = self.n_executors if n_executors is None else n_executors
+        if n < 1:
+            raise ValueError(f"need >= 1 executor, got {n}")
+        out: list[list[str]] = [[] for _ in range(n)]
+        for nm in self.start_order():
+            out[self.placements[nm][0] % n].append(nm)
+        return out
+
     def validate(self, graph: Graph) -> None:
         """Every dep finishes before its consumer starts; executors never
         overlap. Raises AssertionError otherwise."""

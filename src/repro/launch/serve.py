@@ -4,7 +4,9 @@ Builds a (randomly initialized) model, submits synthetic requests, and
 reports decode throughput + per-request latency.  ``--continuous`` routes
 through the graphi-scheduled :class:`ContinuousEngine` (prefill/decode
 captured via ``repro.compile``, profiler-chosen executor config, slot
-admission between decode steps); the default is the wave batcher.
+admission between decode steps, decode replayed through a compiled static
+host plan unless ``--decode-host-mode dynamic``); the default is the wave
+batcher.
 ``--arrival-rate`` staggers request arrivals (Poisson, requests/second)
 instead of submitting everything up front.
 """
@@ -107,6 +109,10 @@ def main() -> int:
     p.add_argument("--max-batch", type=int, default=8)
     p.add_argument("--max-executors", type=int, default=None,
                    help="bound the profiler's executor-config search")
+    p.add_argument("--decode-host-mode", choices=("static", "dynamic"),
+                   default="static",
+                   help="decode-graph runtime: compiled static host plan "
+                        "(default) or the per-op dynamic scheduler")
     p.add_argument("--temperature", type=float, default=0.0)
     args = p.parse_args()
 
@@ -119,10 +125,11 @@ def main() -> int:
         temperature=args.temperature,
     )
     if args.continuous:
-        engine = ContinuousEngine(cfg, params, scfg, max_executors=args.max_executors)
+        engine = ContinuousEngine(cfg, params, scfg, max_executors=args.max_executors,
+                                  decode_host_mode=args.decode_host_mode)
         print(f"continuous engine: {engine.pool.n_executors} executors "
               f"(profiled best {engine.profile.best_config}), "
-              f"{engine.capacity} slots")
+              f"{engine.capacity} slots, decode={engine.decode_host_mode}")
     else:
         engine = ServeEngine(cfg, params, scfg)
 

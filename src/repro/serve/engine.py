@@ -154,12 +154,26 @@ class ServeEngine(_SamplerMixin):
 class ContinuousEngine(_SamplerMixin):
     """Continuous-batching engine driven by graphi Executables.
 
-    Construction captures the batched decode step and profiles it
-    (``repro.core.profiler.profile`` picks ``n_executors × team_size`` for
-    the serving graph, optionally bounded by ``max_executors``); prefill
-    graphs are compiled per prompt length on demand, pinned to the same
-    config, and share the decode graph's persistent executor pool — so an
-    admission prefill runs *concurrently* with the in-flight decode step.
+    Construction captures the batched decode step and *calibrates* it:
+    ``Executable.calibrate`` times every node fn on the decode shapes (the
+    paper's first-iterations profiling) and the §4.2 configuration search
+    picks ``n_executors × team_size`` from those measured costs, optionally
+    bounded by ``max_executors``.  Prefill graphs are compiled per prompt
+    length on demand, pinned to the same config, and share the decode
+    graph's persistent executor pool — so an admission prefill runs
+    *concurrently* with the in-flight decode step.
+
+    The decode graph is fixed — one batch shape, replayed once per token —
+    so steady-state steps execute it through a compiled
+    :class:`~repro.core.static_host.StaticHostPlan`
+    (``decode_host_mode="static"``): frozen CPF placements, lock-free
+    dependency counters, no per-op scheduler round-trip.  Everything that
+    coexists with admissions stays dynamic: prefill graphs (shapes vary
+    per prompt length), and the decode step itself on the steps where
+    prefills are in flight — a plan's segments would hold every executor
+    for the whole step, while the dynamic scheduler interleaves per-op
+    with the concurrent prefills.  ``decode_host_mode="dynamic"`` restores
+    the paper-faithful per-op scheduler everywhere for A/B measurement.
 
     Protocol per :meth:`step`:
 
@@ -189,6 +203,7 @@ class ContinuousEngine(_SamplerMixin):
         hw: HardwareModel = KNL7250,
         max_executors: int | None = None,
         pool: ExecutorPool | None = None,
+        decode_host_mode: str = "static",
     ):
         if cfg.frontend:
             raise ValueError("continuous batching supports decoder-only archs "
@@ -204,24 +219,40 @@ class ContinuousEngine(_SamplerMixin):
         self.cache = transformer.init_cache(cfg, self.capacity, scfg.max_len, per_slot=True)
         self._zero_sub_cache = transformer.init_cache(cfg, 1, scfg.max_len, per_slot=True)
 
+        # the decode graph is *fixed* (one shape, replayed once per token):
+        # the compiled static host plan takes the scheduler off its hot path
+        # entirely.  Prefill graphs stay dynamic — their shapes vary per
+        # prompt length and they share the pool with the in-flight decode.
         tok_spec = jax.ShapeDtypeStruct((self.capacity, 1), jnp.int32)
         self._decode_exe = api.compile(
             make_decode_step(cfg), params, self.cache, tok_spec,
-            hw=hw, backend="host", jit_nodes=True,
+            hw=hw, backend="host", jit_nodes=True, host_mode=decode_host_mode,
             name=f"serve_decode[{cfg.name}]",
         )
-        # profiler-chosen executor config for the serving graph (§4.2 search,
-        # optionally bounded — serving should not claim the whole machine)
-        if max_executors is not None:
-            self.profile = self._decode_exe.profile_with(max_executors=max_executors)
-        else:
-            self.profile = self._decode_exe.profile
+        self.decode_host_mode = self._decode_exe.host_mode
+        # profile-guided executor config for the serving graph: the §4.2
+        # search over *measured* per-op costs (Executable.calibrate runs the
+        # paper's first-iterations profiling, jit-compiling every node fn as
+        # a side effect).  Analytic flops misrank tiny jitted decode ops —
+        # their cost is dispatch, not arithmetic — and the static plan
+        # freezes the resulting placement, so it must come from real
+        # timings.  Optionally bounded: serving should not claim the whole
+        # machine.
+        self.profile = self._decode_exe.calibrate(
+            params, jax.tree.map(jnp.zeros_like, self.cache),
+            jnp.full((self.capacity, 1), scfg.pad_id, jnp.int32),
+            max_executors=max_executors)
         n_exec = self._decode_exe.planned_executors
         if max_executors is not None:
             n_exec = max(1, min(n_exec, max_executors))
         self.pool = pool if pool is not None else ExecutorPool(n_exec)
         self._own_pool = pool is None
         self._decode_exe.pool = self.pool
+        if self._decode_exe.host_mode == "static":
+            # freeze the plan now (not on the first request) at the planned
+            # width — a shared pool wider than the calibrated config must
+            # not widen the placement
+            self._decode_exe.host_plan()
         self._team_size = self.profile.best_team_size
         self._prefill_exes: dict[int, api.Executable] = {}
 
@@ -247,6 +278,13 @@ class ContinuousEngine(_SamplerMixin):
         # steady-state cost from the first request on
         warm = jax.tree.map(jnp.zeros_like, self.cache)
         logits, _ = self._decode_exe(params, warm, jnp.asarray(self._tokens))
+        if self._decode_exe.host_mode == "static":
+            # steps with admissions in flight fall back to the dynamic
+            # scheduler (_decode_once) — warm that path's state too
+            self._decode_exe.execute_host(
+                self._decode_exe.captured.bind(
+                    (params, warm, jnp.asarray(self._tokens))),
+                host_mode="dynamic")
         sample_tokens(logits, cfg.vocab_size, scfg.temperature,
                       jax.random.key(0) if scfg.temperature > 0 else None)
         warm = self._insert(warm, self._zero_sub_cache, jnp.int32(0))
@@ -336,10 +374,22 @@ class ContinuousEngine(_SamplerMixin):
         else:
             self._tokens[slot, 0] = token
 
-    def _decode_once(self) -> None:
-        logits, self.cache = self._decode_exe(
-            self.params, self.cache, jnp.asarray(self._tokens)
-        )
+    def _decode_once(self, *, overlapping_prefills: bool = False) -> None:
+        exe = self._decode_exe
+        if overlapping_prefills and exe.host_mode == "static":
+            # a static plan's segments hold every executor for the whole
+            # step, which would serialize the concurrent admission prefills
+            # behind the decode; the dynamic scheduler interleaves per-op,
+            # so steps with prefills in flight fall back to it.  Steady-state
+            # steps (the vast majority) replay the compiled plan.
+            inputs = exe.captured.bind(
+                (self.params, self.cache, jnp.asarray(self._tokens)))
+            res = exe.execute_host(inputs, host_mode="dynamic")
+            logits, self.cache = exe.captured.unflatten(res.outputs)
+        else:
+            logits, self.cache = exe(
+                self.params, self.cache, jnp.asarray(self._tokens)
+            )
         self.n_decode_steps += 1
         nxt = self._sample(logits)
         for i in range(self.capacity):
@@ -372,7 +422,7 @@ class ContinuousEngine(_SamplerMixin):
 
             th = threading.Thread(target=prefill_worker, name="serve-prefill")
             th.start()
-            self._decode_once()
+            self._decode_once(overlapping_prefills=True)
             th.join()
             if "err" in box:
                 raise box["err"]

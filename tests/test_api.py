@@ -196,6 +196,17 @@ def test_drain_refills_all_idle_executors():
     assert span < 4 * 0.03
 
 
+def test_scheduler_rejects_graph_mutation_between_runs():
+    # per-graph immutables are hoisted to __init__; a node added after
+    # construction must fail loudly, not silently never execute
+    g = _sources(2)
+    sched = HostScheduler(g, 1)
+    assert sched.run().outputs["sum"] == 1
+    g.add_op("extra", deps=("sum",), flops=1.0, fn=lambda v: v)
+    with pytest.raises(RuntimeError, match="grew"):
+        sched.run()
+
+
 def test_executor_exception_propagates_not_deadlocks():
     g = Graph("boom")
     g.add_op("a", flops=1.0, fn=lambda: 1)

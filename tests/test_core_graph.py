@@ -42,6 +42,18 @@ def test_sources_sinks_width():
     assert g.width() == 2
 
 
+def test_successors_cached_tuple_invalidated_on_add():
+    g = diamond()
+    succ = g.successors("a")
+    assert succ == ("b", "c") and isinstance(succ, tuple)
+    assert g.successors("a") is succ                 # cached, not a copy
+    assert g.predecessors("d") == ("b", "c")
+    assert g.predecessors("a") == ()
+    g.add_op("e", deps=("a", "d"))
+    assert g.successors("a") == ("b", "c", "e")      # cache invalidated
+    assert g.successors("d") == ("e",)
+
+
 def test_levels_and_critical_path():
     g = diamond()
     costs = {n.name: n.flops for n in g.nodes}

@@ -64,7 +64,7 @@ def test_recurrence_graph_structure():
     assert len(g) == 12
     assert g.width() == 3
     # corner deps
-    assert g.predecessors("cell_L0_T0") == []
+    assert g.predecessors("cell_L0_T0") == ()    # cached immutable tuple
     assert set(g.predecessors("cell_L1_T1")) == {"cell_L0_T1", "cell_L1_T0"}
 
 

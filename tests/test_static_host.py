@@ -1,0 +1,296 @@
+"""Compiled static host plans (ISSUE 4): bit-exact parity with the
+sequential ``Graph.execute`` oracle across the captured model families,
+op-exception propagation out of a static run, and dynamic-vs-static
+coexistence on one shared :class:`ExecutorPool`."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import KNL7250, Graph, GraphValidationError, make_schedule
+from repro.core.engine import ExecutorPool, HostScheduler
+from repro.core.static_host import compile_host_plan, layered_graph as layered
+from repro.train.step import lm_loss_fn
+from test_capture import TINY, _setup
+
+
+# ---------------------------------------------------------------------------
+# parity: static plan execution == sequential interpreter, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(TINY))
+def test_static_parity_model_families(family):
+    cfg, params, batch = _setup(family)
+    exe = repro.compile(lm_loss_fn(cfg), params, batch, backend="host",
+                        host_mode="static", n_executors=4, team_size=2)
+    oracle = exe.captured.run(params, batch)        # Graph.execute
+    got = exe(params, batch)
+    # same fns applied to the same values in dependency order: the static
+    # run must be *bit-identical* to the sequential oracle, not just close
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(oracle))
+    again = exe(params, batch)                      # plan replay, same result
+    np.testing.assert_array_equal(np.asarray(again), np.asarray(oracle))
+    assert exe.host_plan().n_ops >= 20
+
+
+def test_static_matches_oracle_random_dag():
+    rng = np.random.default_rng(11)
+    g = Graph("rand")
+    for i in range(40):
+        deps = tuple(f"n{d}" for d in rng.choice(i, size=min(i, rng.integers(0, 4)),
+                                                 replace=False)) if i else ()
+        g.add_op(f"n{i}", flops=float(rng.integers(1, 100)), deps=deps,
+                 fn=(lambda *xs, i=i: float(i) + sum(xs)))
+    sched = make_schedule(g, KNL7250, n_executors=3, team_size=2)
+    plan = compile_host_plan(g, sched)
+    assert plan.run().outputs == g.execute()        # ephemeral pool
+    with ExecutorPool(3) as pool:
+        for _ in range(5):                          # replay on a shared pool
+            assert plan.run(pool=pool).outputs == g.execute()
+
+
+def test_static_run_with_trace_covers_every_op():
+    g = layered()
+    exe = repro.compile(g, hw=KNL7250, backend="host", host_mode="static",
+                        n_executors=3, team_size=2)
+    res = exe.execute_host({"x": 1}, collect_trace=True)
+    assert res.outputs == g.execute({"x": 1})
+    assert len(res.trace) == exe.host_plan().n_ops
+    assert len({ev.executor for ev in res.trace}) >= 2
+    assert res.makespan >= max(ev.end for ev in res.trace) - 1e-9
+    # default runs skip tracing — timestamps are the overhead being removed
+    assert exe.execute_host({"x": 1}).trace == []
+
+
+# ---------------------------------------------------------------------------
+# plan structure
+# ---------------------------------------------------------------------------
+
+def test_plan_structure_partitions_ops():
+    g = layered()
+    sched = make_schedule(g, KNL7250, n_executors=3, team_size=2)
+    plan = compile_host_plan(g, sched)
+    assert plan.n_executors == 3
+    placed = [i for prog in plan.programs for i in prog]
+    executed = [plan.ids[n] for n in g.names if g[n].fn is not None]
+    assert sorted(placed) == sorted(executed)       # exact partition
+    for e, prog in enumerate(plan.programs):
+        assert all(plan.owner[i] == e for i in prog)
+    assert plan.input_ids == (plan.ids["x"],)
+    assert plan.owner[plan.ids["x"]] == -1
+    # layer-0 ops wait only on the inline-resolved input: they are seeds
+    seeds = {i for s in plan.seeds for i in s}
+    assert seeds == {plan.ids[f"l0w{w}"] for w in range(3)}
+    assert "3 executors" in plan.describe()
+
+
+def test_plan_folds_onto_fewer_executors():
+    g = layered()
+    sched = make_schedule(g, KNL7250, n_executors=4, team_size=2)
+    plan = compile_host_plan(g, sched, n_executors=2)
+    assert plan.n_executors == 2
+    assert all(0 <= plan.owner[i] < 2 for prog in plan.programs for i in prog)
+    assert plan.run({"x": 3}).outputs == g.execute({"x": 3})
+
+
+def test_plan_rejects_fnless_node_with_deps():
+    g = Graph("bad")
+    g.add_op("a", fn=lambda: 1)
+    g.add_op("b", deps=("a",))                      # no fn, has deps
+    sched = make_schedule(g, KNL7250, n_executors=2, team_size=1)
+    with pytest.raises(GraphValidationError, match="deps but no fn"):
+        compile_host_plan(g, sched)
+
+
+def test_plan_cached_per_executor_count():
+    exe = repro.compile(layered(), hw=KNL7250, backend="host",
+                        host_mode="static", n_executors=3, team_size=2)
+    p3 = exe.host_plan(3)
+    assert exe.host_plan(3) is p3                   # cached
+    p2 = exe.host_plan(2)
+    assert p2 is not p3 and p2.n_executors == 2
+    exe.execute_host({"x": 0})                      # static by default
+    assert exe.host_plan() in (p2, p3)              # run reused the cache
+
+
+def test_wide_shared_pool_does_not_widen_the_plan():
+    g = layered()
+    with ExecutorPool(4) as pool:
+        exe = repro.compile(g, hw=KNL7250, backend="host", host_mode="static",
+                            n_executors=2, team_size=1, pool=pool)
+        # planned width (2) wins over the pool's width (4): a plan frozen
+        # wider than the profiled config pays wakeups it chose to avoid
+        assert exe.host_plan().n_executors == 2
+        assert exe.execute_host({"x": 5}).outputs == g.execute({"x": 5})
+
+
+def test_poolless_static_executable_keeps_one_pool():
+    g = layered()
+    with repro.compile(g, hw=KNL7250, backend="host", host_mode="static",
+                       n_executors=2, team_size=1) as exe:
+        assert exe._auto_pool is None
+        assert exe.execute_host({"x": 1}).outputs == g.execute({"x": 1})
+        auto = exe._auto_pool
+        assert auto is not None                     # owned, persistent...
+        exe.execute_host({"x": 2})
+        assert exe._auto_pool is auto               # ...and reused per call
+    assert exe._auto_pool is None                   # context exit closed it
+
+
+def test_calibrate_freezes_measured_costs_into_plans():
+    g = layered()
+    exe = repro.compile(g, hw=KNL7250, backend="host", host_mode="static")
+    p0 = exe.host_plan()
+    prof = exe.calibrate(inputs={"x": 1})
+    assert prof is exe.profile                      # re-cached
+    assert exe.host_plan() is not p0                # replanned
+    sched = exe.schedule
+    executed = [n for n in g.names if g[n].fn is not None]
+    assert all(sched.op_costs[n] > 0 for n in executed)   # measured, not flops
+    assert exe.execute_host({"x": 4}).outputs == g.execute({"x": 4})
+    # later re-profiles keep the measured table: the config search and the
+    # frozen placements must agree on one cost model
+    prof2 = exe.profile_with(max_executors=2)
+    assert prof2.op_costs == dict(exe._measured(prof2.best_team_size))
+    with pytest.raises(TypeError, match="captured"):
+        exe.calibrate(1)                            # raw graphs need inputs=
+
+
+def test_profile_with_invalidates_cached_plans():
+    exe = repro.compile(layered(), hw=KNL7250, backend="host",
+                        host_mode="static")
+    plan = exe.host_plan()
+    assert exe._host_plans                          # populated
+    exe.profile_with()                              # new profile -> new schedule
+    assert not exe._host_plans                      # plans froze the old one
+    assert exe.host_plan() is not plan
+    assert exe.execute_host({"x": 2}).outputs == layered().execute({"x": 2})
+
+
+# ---------------------------------------------------------------------------
+# failure + validation
+# ---------------------------------------------------------------------------
+
+def test_op_exception_propagates_and_pool_survives():
+    bad = Graph("boom")
+    bad.add_op("a", flops=1.0, fn=lambda: 1)
+    bad.add_op("b", deps=("a",), flops=1.0,
+               fn=lambda v: (_ for _ in ()).throw(ValueError("boom")))
+    bad.add_op("c", deps=("b",), flops=1.0, fn=lambda v: v + 1)
+    sched = make_schedule(bad, KNL7250, n_executors=2, team_size=1)
+    plan = compile_host_plan(bad, sched)
+    with ExecutorPool(2) as pool:
+        with pytest.raises(RuntimeError, match="'b' failed"):
+            plan.run(pool=pool)
+        # every segment exited on the poison ids; the pool still serves
+        g = layered()
+        good = compile_host_plan(
+            g, make_schedule(g, KNL7250, n_executors=2, team_size=1))
+        assert good.run({"x": 2}, pool=pool).outputs == g.execute({"x": 2})
+
+
+def test_missing_input_raises():
+    g = layered()
+    plan = compile_host_plan(
+        g, make_schedule(g, KNL7250, n_executors=2, team_size=1))
+    with pytest.raises(GraphValidationError, match="no fn and no input"):
+        plan.run({})
+
+
+def test_plan_wider_than_pool_rejected():
+    g = layered()
+    plan = compile_host_plan(
+        g, make_schedule(g, KNL7250, n_executors=4, team_size=1))
+    with ExecutorPool(2) as pool:
+        with pytest.raises(ValueError, match="recompile the plan"):
+            plan.run({"x": 0}, pool=pool)
+
+
+def test_host_mode_validation():
+    with pytest.raises(ValueError, match="host_mode"):
+        repro.compile(layered(), hw=KNL7250, backend="host", host_mode="turbo")
+    exe = repro.compile(layered(), hw=KNL7250, backend="host",
+                        n_executors=2, team_size=1)
+    with pytest.raises(ValueError, match="host_mode"):
+        exe.execute_host({"x": 0}, host_mode="turbo")
+    # per-run override in both directions
+    assert exe.host_mode == "dynamic"
+    oracle = layered().execute({"x": 7})
+    assert exe.execute_host({"x": 7}, host_mode="static").outputs == oracle
+    assert exe.execute_host({"x": 7}, host_mode="dynamic").outputs == oracle
+
+
+# ---------------------------------------------------------------------------
+# coexistence: static plan runs alongside an in-flight dynamic run
+# ---------------------------------------------------------------------------
+
+def test_static_and_dynamic_share_one_pool():
+    slow = Graph("slow")
+    slow.add_op("s0", flops=1.0, fn=lambda: (time.sleep(0.01), 1)[1])
+    for i in range(1, 8):
+        slow.add_op(f"s{i}", deps=(f"s{i-1}",), flops=1.0,
+                    fn=lambda v: (time.sleep(0.01), v + 1)[1])
+    g = layered()
+    with ExecutorPool(2) as pool:
+        plan = compile_host_plan(
+            g, make_schedule(g, KNL7250, n_executors=2, team_size=1))
+        box = {}
+
+        def dynamic_run():
+            box["dyn"] = HostScheduler(slow, 2, pool=pool).run().outputs["s7"]
+
+        th = threading.Thread(target=dynamic_run)
+        th.start()
+        outs = [plan.run({"x": k}, pool=pool).outputs["out"] for k in range(6)]
+        th.join(timeout=30)
+        assert not th.is_alive()
+        assert box["dyn"] == 8
+        assert outs == [g.execute({"x": k})["out"] for k in range(6)]
+
+
+def test_two_static_plans_interleave_on_one_pool():
+    ga, gb = layered(L=4), layered(L=7, W=2)
+    with ExecutorPool(2) as pool:
+        pa = compile_host_plan(
+            ga, make_schedule(ga, KNL7250, n_executors=2, team_size=1))
+        pb = compile_host_plan(
+            gb, make_schedule(gb, KNL7250, n_executors=2, team_size=1))
+        box = {}
+
+        def run_b():
+            box["b"] = [pb.run({"x": k}, pool=pool).outputs["out"]
+                        for k in range(8)]
+
+        th = threading.Thread(target=run_b)
+        th.start()
+        outs_a = [pa.run({"x": k}, pool=pool).outputs["out"] for k in range(8)]
+        th.join(timeout=30)
+        assert not th.is_alive()
+        assert outs_a == [ga.execute({"x": k})["out"] for k in range(8)]
+        assert box["b"] == [gb.execute({"x": k})["out"] for k in range(8)]
+
+
+def test_serve_engine_static_decode_matches_dynamic():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.models import transformer
+    from repro.serve.engine import ContinuousEngine, Request, ServeConfig
+
+    cfg = get_config("gemma-2b", smoke=True).reduced(vocab_size=200)
+    params = transformer.init_params(cfg, jax.random.key(5))
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (4, 9)]
+
+    outs = {}
+    for mode in ("static", "dynamic"):
+        with ContinuousEngine(cfg, params, ServeConfig(max_batch=2, max_len=24),
+                              decode_host_mode=mode) as eng:
+            assert eng.decode_host_mode == mode
+            for i, pr in enumerate(prompts):
+                eng.submit(Request(request_id=i, prompt=pr, max_new_tokens=5))
+            outs[mode] = [r.output for r in eng.run()]
+    assert outs["static"] == outs["dynamic"]
