@@ -1,11 +1,13 @@
-"""Quickstart: ``repro.compile`` — any JAX function becomes a scheduled
-Graphi graph.
+"""Quickstart: ``repro.Runtime`` — any JAX function becomes a scheduled
+Graphi graph on the process-wide runtime.
 
-Writes a plain JAX function (four parallel GEMM branches + a combine),
-captures it into an operator DAG (one ``compile`` call — no hand-built
-graph), inspects the profile / critical-path-first schedule, executes it
-with the host runtime (centralized scheduler + per-executor buffers), and
-checks the result against calling the function directly.
+Builds the one :class:`repro.Runtime` a process needs (it owns the single
+executor pool, the calibration store, and admission), compiles a plain JAX
+function (four parallel GEMM branches + a combine) into an operator DAG,
+inspects the profile / critical-path-first schedule, executes it with the
+host runtime (the run leases its executors from the runtime), and checks
+the result against calling the function directly.  Bare ``repro.compile``
+does the same through ``repro.default_runtime()``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -28,7 +30,9 @@ def main() -> None:
     x = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
 
-    exe = repro.compile(f, x, w, hw=repro.KNL7250)
+    rt = repro.Runtime(hw=repro.KNL7250)      # the process-wide session
+    print(f"runtime: {rt.describe()}")
+    exe = rt.compile(f, x, w)
     g = exe.graph
     print(f"captured: {g}")
     print(f"nodes: {g.names}")
@@ -47,12 +51,14 @@ def main() -> None:
     cp_len, cp = exe.critical_path
     print(f"critical path ({cp_len*1e6:.1f} us): {' -> '.join(cp)}")
 
-    out = exe(x, w)                       # host backend: real parallel run
+    out = exe(x, w)                       # host backend: leased parallel run
     ref = f(x, w)                         # uncompiled JAX
     err = float(jnp.abs(out - ref))
     used = len({e.executor for e in exe.last_run.trace})
     print(f"host parallel run == direct call: err={err:.2e} "
-          f"({'OK' if err < 1e-3 else 'MISMATCH'}), {used} executors used")
+          f"({'OK' if err < 1e-3 else 'MISMATCH'}), {used} executors used "
+          f"(leased from {rt.n_workers}-worker pool)")
+    rt.close()
 
 
 if __name__ == "__main__":

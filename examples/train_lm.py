@@ -65,10 +65,14 @@ def main() -> None:
     state = init_train_state(cfg, jax.random.key(0), tcfg.adamw)
     step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
 
-    # Graphi view of the same loss: capture -> profile -> CPF schedule gives
-    # the modelled per-step makespan the trainer reports next to wall-clock
+    # Graphi view of the same loss through the process Runtime: capture ->
+    # profile -> CPF schedule gives the modelled per-step makespan the
+    # trainer reports next to wall-clock (one session also means one
+    # executor pool / calibration store if a serve engine shares the process)
+    import repro
+    runtime = repro.default_runtime()
     shape = ShapeSpec("train_lm", args.seq, args.batch, "train")
-    exe = compile_lm_loss(cfg, shape, backend="sim")
+    exe = compile_lm_loss(cfg, shape, backend="sim", runtime=runtime)
     ms = exe.schedule.makespan
     print(f"graphi: loss graph {len(exe.graph)} nodes, width {exe.graph.width()}, "
           f"{exe.schedule.n_executors}x{exe.schedule.team_size} executors, "

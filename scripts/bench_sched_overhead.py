@@ -84,25 +84,32 @@ def bench_decode_step(steps: int) -> dict:
     from repro.models import transformer
     from repro.serve.step import make_decode_step
 
+    from repro.runtime import Runtime
+
     cfg = get_config("gemma-2b", smoke=True).reduced(vocab_size=128)
     params = transformer.init_params(cfg, jax.random.key(0))
     B, max_len = 4, 32
     cache = transformer.init_cache(cfg, B, max_len, per_slot=True)
     toks = jnp.ones((B, 1), jnp.int32)
+    # the production wiring: one Runtime owns the executors, the decode
+    # executable leases its calibrated width per run (admission overhead is
+    # paid identically by both modes, so the ratio stays a pure
+    # scheduler-overhead measurement)
+    rt = Runtime()
     exe = api.compile(
         make_decode_step(cfg), params, cache, jnp.asarray(toks),
         hw=KNL7250, backend="host", jit_nodes=True, name="bench_decode",
+        runtime=rt,
     )
     # profile-guided config + plan, exactly as the serve engine builds them:
     # measured per-op costs (calibrate jit-warms every node fn) drive the
     # executor-count search and the schedule the static plan freezes
     exe.calibrate(params, cache, toks)
-    n_exec = exe.planned_executors
+    n_exec = min(exe.planned_executors, rt.n_workers)
     inputs = exe.captured.bind((params, cache, toks))
     walls: dict[str, list[float]] = {"dynamic": [], "static": []}
     outs = {}
-    with ExecutorPool(n_exec) as pool:
-        exe.pool = pool
+    with rt:
         for mode in walls:                                      # warmup
             res = exe.execute_host(inputs, host_mode=mode)
             jax.block_until_ready(res.outputs)

@@ -85,7 +85,8 @@ def run_engine(make_engine, workload, *, continuous, warm=None):
             "n_steps": eng.n_steps,
             "n_decode_steps": eng.n_decode_steps,
             "n_overlapped_prefills": eng.n_overlapped_prefills,
-            "n_executors": eng.pool.n_executors,
+            "n_executors": eng.n_executors,
+            "runtime_workers": eng.runtime.n_workers if eng.runtime else None,
             "profiled_config": list(eng.profile.best_config),
         })
         eng.close()
@@ -115,12 +116,19 @@ def main() -> int:
         max_new=args.max_new, arrival_rate=args.arrival_rate,
     )
 
+    # the continuous engine leases executors per step from one process
+    # Runtime (the production wiring) instead of constructing its own pool
+    import repro
+    runtime = repro.Runtime()
+    repro.set_default_runtime(runtime)
+
     t0 = time.time()
     wave_row, wave_done = run_engine(
         lambda: ServeEngine(cfg, params, scfg), workload, continuous=False,
         warm=lambda e: warm_wave_shapes(e, cfg, scfg, prompt_lens, args.max_batch))
     cont_row, cont_done = run_engine(
-        lambda: ContinuousEngine(cfg, params, scfg), workload, continuous=True,
+        lambda: ContinuousEngine(cfg, params, scfg, runtime=runtime),
+        workload, continuous=True,
         warm=lambda e: e.warmup(prompt_lens))
     wave_row["bench"] = "serve_wave"
     cont_row["bench"] = "serve_continuous"

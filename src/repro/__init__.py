@@ -5,17 +5,25 @@ Public surface (lazily resolved so ``import repro`` stays cheap and never
 imports jax before entry points set their ``XLA_FLAGS``)::
 
     import repro
-    exe = repro.compile(fn, *specs, hw=repro.KNL7250)   # capture->plan->run
+    rt = repro.Runtime()                     # or rely on repro.default_runtime()
+    exe = rt.compile(fn, *specs)             # capture -> plan -> run on leases
+    exe = repro.compile(fn, *specs)          # same, via the process default
 """
 from __future__ import annotations
 
 import importlib
 
 _EXPORTS = {
-    # the redesigned public API (repro.api)
+    # the redesigned public API (repro.api / repro.runtime)
     "compile": "repro.api",
     "Executable": "repro.api",
     "serve_engine": "repro.api",
+    "Runtime": "repro.runtime",
+    "default_runtime": "repro.runtime",
+    "set_default_runtime": "repro.runtime",
+    "CalibrationStore": "repro.runtime",
+    "ExecutorLease": "repro.runtime",
+    "graph_signature": "repro.runtime",
     # capture + graph IR
     "capture": "repro.core.capture",
     "CapturedGraph": "repro.core.capture",
@@ -31,11 +39,10 @@ _EXPORTS = {
     "SimConfig": "repro.core.simulate",
     "SimResult": "repro.core.simulate",
     "simulate": "repro.core.simulate",
-    # runtimes (GraphiEngine is deprecated; kept for pre-redesign callers)
+    # host runtimes
     "ExecutorPool": "repro.core.engine",
     "HostScheduler": "repro.core.engine",
     "HostRunResult": "repro.core.engine",
-    "GraphiEngine": "repro.core.engine",
     # compiled static host plans (host_mode="static")
     "StaticHostPlan": "repro.core.static_host",
     "compile_host_plan": "repro.core.static_host",

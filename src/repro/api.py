@@ -14,8 +14,16 @@ The paper's Fig-4 pipeline as an object model::
 ``core.capture``) or an already-built :class:`~repro.core.graph.Graph`
 (the paper nets).  All planning artifacts are lazy, cached properties;
 ``Executable`` is the one handle the rest of the stack (launch, train,
-benchmarks, examples) talks to.  ``core.engine.GraphiEngine`` survives only
-as a deprecated shim over this module.
+benchmarks, examples) talks to.
+
+Every executable belongs to a :class:`repro.runtime.Runtime` — the
+process-wide session that owns the single executor pool, the persistent
+calibration store, and the admission layer.  Bare ``repro.compile(...)``
+binds to :func:`repro.runtime.default_runtime`; a host run leases its
+calibrated executor width from the runtime for exactly the duration of the
+run, so concurrent executables share the machine with bounded interference
+instead of each spawning threads.  An explicit ``pool=`` bypasses admission
+(the caller owns sharing).
 
 Backends
 --------
@@ -40,8 +48,16 @@ from repro.core.profiler import ProfileResult, measure_op_costs, profile
 from repro.core.scheduler import Schedule, make_schedule, slot_assignment
 from repro.core.simulate import SimConfig, SimResult, simulate
 from repro.core.static_host import StaticHostPlan, compile_host_plan
+from repro.runtime import Runtime, default_runtime, graph_signature
 
 __all__ = ["Executable", "compile", "serve_engine"]
+
+
+def _cost_fp(costs: Mapping[str, float] | None) -> int | None:
+    """Content fingerprint of a cost table for runtime cache keys (two
+    executables over one graph share plans only when their cost models
+    agree)."""
+    return None if costs is None else hash(frozenset(costs.items()))
 
 _BACKENDS = ("host", "sim", "mesh")
 _HOST_MODES = ("dynamic", "static")
@@ -70,6 +86,8 @@ class Executable:
         mesh: Any = None,
         pool: ExecutorPool | None = None,
         host_mode: str = "dynamic",
+        runtime: Runtime | None = None,
+        signature: str | None = None,
     ):
         if backend not in _BACKENDS:
             raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
@@ -87,10 +105,12 @@ class Executable:
         self.mesh = mesh
         self.pool = pool
         self.host_mode = host_mode
+        self.runtime = runtime
+        self.signature = signature
         self._host: HostScheduler | None = None
         self._host_key: tuple | None = None
         self._host_plans: dict[int, StaticHostPlan] = {}
-        self._auto_pool: ExecutorPool | None = None
+        self._lease_ids: tuple[int, ...] = ()   # sticky-lease affinity hint
         self._measured: Any = None   # measured_costs fn from the last profile
         self._planned: int | None = None   # cached default executor count
         self._n_real: int | None = None    # cached non-input node count
@@ -114,8 +134,15 @@ class Executable:
     @property
     def profile(self) -> ProfileResult:
         if self._profile is None:
+            kw: dict[str, Any] = {}
+            if self._measured is not None:
+                # seeded from the runtime's calibration store (or a prior
+                # calibrate): the lazy first profile must use the measured
+                # table too, not silently fall back to analytic costs
+                kw["measured_costs"] = self._measured
             self._profile = profile(
-                self._graph, self.hw, n_workers=self.usable_workers, policy=self.policy
+                self._graph, self.hw, n_workers=self.usable_workers,
+                policy=self.policy, **kw
             )
         return self._profile
 
@@ -141,6 +168,8 @@ class Executable:
         self._host_key = None
         self._host_plans.clear()    # plans froze the invalidated schedule
         self._planned = None        # best executor count may have moved
+        if self.runtime is not None:
+            self.runtime.invalidate(self._graph)
         return self._profile
 
     @property
@@ -190,6 +219,13 @@ class Executable:
         Pass the executable's call args (captured graphs) or a name→value
         mapping via ``inputs``.  Node fns should be warm (run the
         executable once first) so compile time is not measured.
+
+        When the executable belongs to a :class:`~repro.runtime.Runtime`,
+        the measured table is written to the runtime's
+        :class:`~repro.runtime.CalibrationStore` under the graph's
+        signature — a later ``compile`` of the same graph (this process or,
+        with a store path, the next one) starts calibrated without
+        re-measuring.
         """
         import jax
 
@@ -202,10 +238,18 @@ class Executable:
             self._graph, inputs, warmup=warmup, iters=iters,
             block=jax.block_until_ready,
         )
+        if self.runtime is not None and self.signature is not None:
+            self.runtime.calibration.put(self.signature, costs)
         kw: dict[str, Any] = {"measured_costs": lambda _team: costs}
         if max_executors is not None:
             kw["max_executors"] = max_executors
         return self.profile_with(**kw)
+
+    @property
+    def calibrated(self) -> bool:
+        """Whether a measured cost table backs this executable's schedules
+        (from :meth:`calibrate` or seeded from the runtime's store)."""
+        return self._measured is not None
 
     def simulate(self, **kw: Any) -> SimResult:
         p = self.profile
@@ -291,16 +335,22 @@ class Executable:
         cached schedule's config, a schedule is made for exactly that width
         (same policy and team size) rather than folding executors.  The
         default width is the *planned* executor count, capped at the bound
-        pool's size — never widened to fill a larger shared pool: a plan
-        frozen wider than the profiled config pays cross-executor wakeups
-        the calibration chose to avoid.
+        pool's (or the runtime's) size — never widened to fill a larger
+        shared pool: a plan frozen wider than the profiled config pays
+        cross-executor wakeups the calibration chose to avoid.
+
+        Plans live in the runtime's per-graph cache when the executable has
+        one (two executables over one graph freeze placements once); a
+        runtime-less executable keeps a local cache.
         """
         if n_executors is None:
             n_executors = self._host_executors()
             if self.pool is not None:
                 n_executors = min(n_executors, self.pool.n_executors)
-        plan = self._host_plans.get(n_executors)
-        if plan is None:
+            elif self.runtime is not None:
+                n_executors = min(n_executors, self.runtime.n_workers)
+
+        def build() -> StaticHostPlan:
             sched = self.schedule
             if sched.n_executors != n_executors:
                 costs = (dict(self._measured(sched.team_size))
@@ -309,15 +359,47 @@ class Executable:
                     self._graph, self.hw, n_executors=n_executors,
                     team_size=sched.team_size, policy=self.policy, costs=costs,
                 )
-            plan = compile_host_plan(self._graph, sched, n_executors=n_executors)
-            self._host_plans[n_executors] = plan
+            return compile_host_plan(self._graph, sched, n_executors=n_executors)
+
+        plan = self._host_plans.get(n_executors)
+        if plan is not None:                 # O(1) on the per-step hot path
+            return plan
+        if self.runtime is not None:
+            sched = self.schedule
+            key = ("plan", n_executors, sched.team_size, self.policy,
+                   _cost_fp(sched.op_costs or None))
+            plan = self.runtime.cached(self._graph, key, build)
+        else:
+            plan = build()
+        self._host_plans[n_executors] = plan
         return plan
+
+    def _host_scheduler(self, n: int) -> HostScheduler:
+        """The dynamic scheduler for width ``n`` (pool passed per run, so one
+        scheduler serves every lease).  The runtime cache shares schedulers
+        across executables of one graph; the exe-level slot in front of it
+        keeps the per-step lookup O(1)."""
+        if self._host is not None and self._host_key == (n,):
+            return self._host
+
+        def build() -> HostScheduler:
+            return HostScheduler(
+                self._graph, n, costs=self.schedule.op_costs or None)
+
+        if self.runtime is not None:
+            key = ("host", n, _cost_fp(self.schedule.op_costs or None))
+            host = self.runtime.cached(self._graph, key, build)
+        else:
+            host = build()
+        self._host = host
+        self._host_key = (n,)
+        return host
 
     def execute_host(
         self,
         inputs: Mapping[str, Any] | None = None,
         n_executors: int | None = None,
-        pool: ExecutorPool | None = None,
+        pool: Any = None,
         *,
         host_mode: str | None = None,
         plan: StaticHostPlan | None = None,
@@ -326,9 +408,13 @@ class Executable:
         """Run the host runtime on a name→value input mapping.
 
         With a ``pool`` (given here or at compile time) the run submits to
-        those persistent executors — a serving decode loop reuses one
-        HostScheduler instead of paying thread startup per step — and the
-        pool's size wins over the planned executor count.
+        those persistent executors — the caller owns sharing — and the
+        pool's size wins over the planned executor count.  Without one, the
+        run **leases** its executor width from the executable's
+        :class:`~repro.runtime.Runtime` (the process default if none was
+        bound) for exactly the duration of the run: concurrent executables
+        queue for disjoint executor subsets instead of oversubscribing the
+        machine.
 
         ``host_mode`` overrides the compile-time knob for this run:
         ``"static"`` executes the cached :meth:`host_plan` (lock-free
@@ -343,42 +429,60 @@ class Executable:
         if mode not in _HOST_MODES:
             raise ValueError(
                 f"host_mode must be one of {_HOST_MODES}, got {mode!r}")
-        if plan is not None or mode == "static":
-            if plan is None:
-                n = self._host_executors(n_executors)
-                if pool is not None:
-                    n = min(n, pool.n_executors)
-                plan = self.host_plan(n)
-            if pool is None:
-                # own a persistent pool rather than spinning threads up and
-                # down per call — replayed static graphs are the whole point
-                pool = self._auto_pool
-                if pool is None or pool.n_executors < plan.n_executors:
+        rt: Runtime | None = None
+        if pool is None:
+            rt = self.runtime
+            if rt is None:
+                # a bare Executable still shares the process pool — nothing
+                # in the stack owns private executor threads any more
+                rt = self.runtime = default_runtime()
+        lease = None
+        try:
+            if plan is not None or mode == "static":
+                if plan is None:
+                    n = self._host_executors(n_executors)
                     if pool is not None:
-                        pool.close()
-                    pool = self._auto_pool = ExecutorPool(plan.n_executors)
-            res = plan.run(inputs, pool=pool, collect_trace=collect_trace)
+                        n = min(n, pool.n_executors)
+                    else:
+                        n = min(n, rt.n_workers)
+                    plan = self.host_plan(n)
+                if pool is None:
+                    if plan.n_executors > rt.n_workers:
+                        # admission clamps leases to the pool — an oversized
+                        # explicit plan must fail here, naming the remedy,
+                        # not deep in plan.run after a silent clamp
+                        raise ValueError(
+                            f"plan needs {plan.n_executors} executors but the "
+                            f"runtime has {rt.n_workers}; recompile the plan "
+                            "for the runtime width or pass an explicit pool"
+                        )
+                    lease = rt.lease(plan.n_executors, prefer=self._lease_ids)
+                    self._lease_ids = lease.executor_ids
+                    pool = lease
+                res = plan.run(inputs, pool=pool, collect_trace=collect_trace)
+                self.last_run = res
+                return res
+            n = self._host_executors(n_executors)
+            if pool is not None:
+                n = pool.n_executors
+            else:
+                n = min(n, rt.n_workers)
+            host = self._host_scheduler(n)
+            if pool is None:
+                lease = rt.lease(n, prefer=self._lease_ids)
+                self._lease_ids = lease.executor_ids
+                pool = lease
+            res = host.run(inputs, pool=pool)
             self.last_run = res
             return res
-        n = self._host_executors(n_executors)
-        key = (n, id(pool))
-        if self._host is None or self._host_key != key:
-            self._host = HostScheduler(
-                self._graph, n, costs=self.schedule.op_costs or None, pool=pool
-            )
-            self._host_key = key
-        res = self._host.run(inputs)
-        self.last_run = res
-        return res
+        finally:
+            if lease is not None:
+                lease.release()
 
     def close(self) -> None:
-        """Release the executable's own executor pool (static runs without a
-        shared ``pool`` keep one alive between calls).  Pool threads are
-        daemons, so skipping this never hangs interpreter exit; an
-        externally provided pool is the caller's to close."""
-        if self._auto_pool is not None:
-            self._auto_pool.close()
-            self._auto_pool = None
+        """Back-compat no-op: executables no longer own executor threads.
+        Runs lease executors from the runtime and return them when the run
+        completes; the pool itself is the runtime's to close."""
 
     def __enter__(self) -> "Executable":
         return self
@@ -447,6 +551,7 @@ def compile(
     mesh: Any = None,
     pool: ExecutorPool | None = None,
     host_mode: str = "dynamic",
+    runtime: Runtime | None = None,
 ) -> Executable:
     """Turn a JAX function (or a pre-built :class:`Graph`) into a scheduled
     :class:`Executable`.
@@ -454,14 +559,18 @@ def compile(
     ``specs`` are the function's example inputs — concrete arrays or
     ``jax.ShapeDtypeStruct`` pytrees (capture reads shapes/dtypes only).
     ``n_executors``/``team_size`` pin the executor configuration instead of
-    profiling for the best one.  ``pool`` shares one persistent
-    :class:`ExecutorPool` across executables (e.g. a serve engine's prefill
-    and decode graphs submitting to the same executors).  ``jit_nodes``
-    wraps every node ``fn`` in ``jax.jit`` — one compiled XLA call per node
-    instead of eager per-equation dispatch, the right trade for graphs
-    executed thousands of times (a serving decode loop).  ``host_mode``
-    picks the host-backend runtime: ``"dynamic"`` (paper-faithful
-    centralized scheduler) or ``"static"`` (compiled
+    profiling for the best one.  ``runtime`` binds the executable to a
+    :class:`~repro.runtime.Runtime` session (defaulting to the process-wide
+    one): host runs lease executors from its pool, planning artifacts land
+    in its caches, and a calibration-store hit seeds the cost model without
+    re-measuring.  ``pool`` instead shares one explicit persistent
+    :class:`ExecutorPool` across executables, bypassing admission (e.g. a
+    serve engine's prefill and decode graphs submitting to the same
+    executors).  ``jit_nodes`` wraps every node ``fn`` in ``jax.jit`` — one
+    compiled XLA call per node instead of eager per-equation dispatch, the
+    right trade for graphs executed thousands of times (a serving decode
+    loop).  ``host_mode`` picks the host-backend runtime: ``"dynamic"``
+    (paper-faithful centralized scheduler) or ``"static"`` (compiled
     :class:`~repro.core.static_host.StaticHostPlan` — per-op scheduling
     overhead amortized to ~zero, the right mode for replayed graphs).
     """
@@ -480,7 +589,10 @@ def compile(
         graph = captured.graph
     if jit_nodes:
         graph = _jit_graph(graph)
-    return Executable(
+    if runtime is None and pool is None:
+        runtime = default_runtime()
+    signature = graph_signature(graph, variant="jit" if jit_nodes else "")
+    exe = Executable(
         graph,
         hw,
         captured=captured,
@@ -493,7 +605,16 @@ def compile(
         mesh=mesh,
         pool=pool,
         host_mode=host_mode,
+        runtime=runtime,
+        signature=signature,
     )
+    if runtime is not None:
+        costs = runtime.calibration.get(signature)
+        if costs is not None:
+            # a prior calibrate() of this graph (this process or a saved
+            # store): schedules and plans start from measured costs
+            exe._measured = lambda _team, _costs=costs: _costs
+    return exe
 
 
 def _jit_graph(graph: Graph) -> Graph:
@@ -529,9 +650,11 @@ def serve_engine(
     per-request slot admission.  ``continuous=False`` returns the
     length-bucketed wave :class:`~repro.serve.engine.ServeEngine`.
     Extra kwargs go to the engine constructor — ``rng_seed=`` for either
-    engine; ``hw=``, ``max_executors=``, ``pool=``, and
-    ``decode_host_mode=`` ("static" default: the fixed decode graph runs a
-    compiled host plan) are continuous-only.
+    engine; ``hw=``, ``max_executors=``, ``pool=``, ``runtime=`` (the
+    :class:`~repro.runtime.Runtime` whose executors the engine leases per
+    step; defaults to the process-wide one), and ``decode_host_mode=``
+    ("static" default: the fixed decode graph runs a compiled host plan)
+    are continuous-only.
     """
     from repro.serve.engine import ContinuousEngine, ServeConfig, ServeEngine
 

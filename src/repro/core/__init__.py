@@ -13,7 +13,7 @@ from .cost_model import (
     op_time,
     sequential_makespan,
 )
-from .engine import GraphiEngine, HostRunResult, HostScheduler
+from .engine import HostRunResult, HostScheduler
 from .graph import Graph, GraphValidationError, OpNode
 from .profiler import ProfileResult, enumerate_symmetric_configs, measure_op_costs, profile
 from .scheduler import Schedule, make_schedule, slot_assignment
@@ -37,7 +37,6 @@ __all__ = [
     "Graph",
     "GraphValidationError",
     "OpNode",
-    "GraphiEngine",
     "capture",
     "HostRunResult",
     "HostScheduler",

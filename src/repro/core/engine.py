@@ -1,4 +1,4 @@
-"""Host runtime + the deprecated ``GraphiEngine`` facade.
+"""Host runtime: executor pool + the paper-faithful dynamic scheduler.
 
 * :class:`HostScheduler` — the **paper-faithful dynamic runtime**: a
   centralized scheduler (runs on the client thread, §5.2) with critical-path-
@@ -12,12 +12,9 @@
   outlives any single run.  Several :class:`HostScheduler` runs — several
   *graphs* — submit to one pool concurrently (each run drains its own
   triggered queue), which is what lets a serve engine overlap a prefill
-  graph with the in-flight decode graph on the same executors.
-
-* :class:`GraphiEngine` — **deprecated**: the original five-call stateful
-  facade (profile / schedule / static_slots / simulate / execute_host), now
-  a thin shim over :class:`repro.api.Executable`.  New code should call
-  ``repro.api.compile`` (see DESIGN.md §3).
+  graph with the in-flight decode graph on the same executors.  A process
+  normally has exactly one, owned by :class:`repro.runtime.Runtime`, which
+  leases disjoint executor subsets to concurrent runs.
 """
 from __future__ import annotations
 
@@ -25,18 +22,14 @@ import heapq
 import queue
 import threading
 import time
-import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable, Mapping
 
-from .cost_model import HardwareModel
 from .graph import Graph
-from .profiler import ProfileResult
-from .scheduler import Schedule
-from .simulate import SimResult, TraceEvent
+from .simulate import TraceEvent
 
-__all__ = ["ExecutorPool", "GraphiEngine", "HostScheduler", "HostRunResult"]
+__all__ = ["ExecutorPool", "HostScheduler", "HostRunResult"]
 
 _ERR = object()   # triggered-queue sentinel: an executor relayed an exception
 
@@ -109,13 +102,27 @@ class ExecutorPool:
         return self._buffers[ex].qsize()
 
     def close(self) -> None:
-        if self._closed:
-            return
-        self._closed = True
-        for b in self._buffers:
-            b.put(None)
+        """Shut the executor threads down. Idempotent and segment-safe:
+
+        * the shutdown sentinels go in under the segment lock, so they can
+          never split an in-flight ``submit_segments`` batch — work queued
+          *before* close (including a whole static plan) still completes
+          (SimpleQueue is FIFO: every item precedes its buffer's sentinel);
+        * a second ``close()`` — or one racing the first from another
+          thread — neither re-poisons the buffers nor raises; it just joins
+          whatever threads remain;
+        * closing from an executor thread itself (an op that tears its own
+          pool down) skips the self-join instead of raising.
+        """
+        with self._segment_lock:
+            if not self._closed:
+                self._closed = True
+                for b in self._buffers:
+                    b.put(None)
+        me = threading.current_thread()
         for t in self._threads:
-            t.join(timeout=5)
+            if t is not me:
+                t.join(timeout=5)
 
     def __enter__(self) -> "ExecutorPool":
         return self
@@ -134,9 +141,14 @@ class ExecutorPool:
                 out = task()
             except BaseException as e:  # noqa: BLE001 — relayed to the run
                 reply.put((_ERR, e, ex, name, 0.0))
+                del item, task
                 continue
             t1 = time.perf_counter() - t_origin
             reply.put((name, out, ex, t0, t1))
+            # an idle executor must not pin its last task (a static-plan
+            # segment closes over the whole plan -> graph) or result arrays
+            # until the next item arrives
+            del item, task, out
 
 
 def _input_lookup(inputs: Mapping[str, Any], name: str) -> Any:
@@ -162,7 +174,11 @@ class HostScheduler:
 
     ``pool`` binds the run to a shared persistent :class:`ExecutorPool`
     (``n_executors`` then follows the pool's size); without one, each
-    ``run()`` spins up an ephemeral pool and tears it down on exit.
+    ``run()`` spins up an ephemeral pool and tears it down on exit — or
+    takes a per-run pool/lease via ``run(pool=...)``, which is how a
+    :class:`repro.runtime.Runtime` executes the same scheduler on a fresh
+    :class:`~repro.runtime.ExecutorLease` every run without rebuilding the
+    hoisted per-graph immutables.
     """
 
     def __init__(
@@ -193,7 +209,12 @@ class HostScheduler:
         self._ready0 = sorted(self._entry[n] for n in names if self._indeg0[n] == 0)
         self._total = len(graph)
 
-    def run(self, inputs: Mapping[str, Any] | None = None) -> HostRunResult:
+    def run(
+        self,
+        inputs: Mapping[str, Any] | None = None,
+        *,
+        pool: Any = None,
+    ) -> HostRunResult:
         g = self.graph
         if len(g) != self._total:
             # the per-graph immutables above were hoisted to __init__; a
@@ -211,10 +232,15 @@ class HostScheduler:
         ready: list[tuple[float, int, str]] = list(self._ready0)  # sorted => heap
 
         n_exec = self.n_executors
-        pool = self.pool
+        pool = pool if pool is not None else self.pool
         ephemeral = pool is None
         if ephemeral:
             pool = ExecutorPool(n_exec)
+        elif pool.n_executors < n_exec:
+            raise ValueError(
+                f"run needs {n_exec} executors but the pool has "
+                f"{pool.n_executors}"
+            )
         # depth is enforced per-run by the inflight counters, so the pool's
         # queues stay unbounded — shutdown puts never block on a full buffer
         triggered: queue.SimpleQueue = queue.SimpleQueue()
@@ -316,70 +342,3 @@ class HostScheduler:
             outputs=results, trace=trace, makespan=makespan,
             peak_inflight=max(peak_inflight, 1),
         )
-
-
-@dataclass
-class GraphiEngine:
-    """Deprecated shim: profile -> schedule -> execute (Fig 4).
-
-    Use ``repro.api.compile(graph_or_fn, ..., hw=...)`` instead — it returns
-    an :class:`~repro.api.Executable` owning the same pipeline as lazy
-    cached properties.  This class remains so pre-redesign call sites keep
-    working; every method delegates to an Executable underneath.
-    """
-
-    graph: Graph
-    hw: HardwareModel
-    n_workers: int | None = None  # defaults to hw.n_workers minus 2 reserved
-    reserved_workers: int = 2     # scheduler core + lightweight executor (§5.2)
-    _exe: Any = field(default=None, repr=False)
-
-    def __post_init__(self) -> None:
-        warnings.warn(
-            "GraphiEngine is deprecated; use repro.api.compile(...) instead",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-
-    def _executable(self):
-        if self._exe is None:
-            from repro.api import Executable
-
-            self._exe = Executable(
-                self.graph,
-                self.hw,
-                backend="sim",
-                n_workers=self.n_workers,
-                reserved_workers=self.reserved_workers,
-            )
-        return self._exe
-
-    @property
-    def usable_workers(self) -> int:
-        return self._executable().usable_workers
-
-    def profile(self, **kw: Any) -> ProfileResult:
-        if kw:
-            return self._executable().profile_with(**kw)
-        return self._executable().profile
-
-    def schedule(self, policy: str = "cpf") -> Schedule:
-        return self._executable().schedule_for(policy)
-
-    def static_slots(self, policy: str = "cpf") -> list[list[str]]:
-        from .scheduler import slot_assignment
-
-        return slot_assignment(self.graph, self.schedule(policy))
-
-    def static_plan(self, mesh: Any, *, policy: str = "cpf", axis: str | None = None):
-        from repro.dist.executor_mesh import plan_from_schedule
-
-        return plan_from_schedule(self.graph, self.schedule(policy), mesh, axis=axis)
-
-    def simulate(self, policy: str = "cpf", **kw: Any) -> SimResult:
-        return self._executable().simulate(policy=policy, **kw)
-
-    def execute_host(
-        self, inputs: Mapping[str, Any] | None = None, n_executors: int | None = None
-    ) -> HostRunResult:
-        return self._executable().execute_host(inputs, n_executors=n_executors)

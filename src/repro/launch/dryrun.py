@@ -32,10 +32,13 @@ from repro.models.api import model_flops
 MAX_MEMORY_BUMPS = 4
 
 
-def graphi_record(cell, arch: str, shape_name: str) -> dict:
+def graphi_record(cell, arch: str, shape_name: str, runtime=None) -> dict:
     """Capture the cell's step fn into a scheduled ``Executable`` (abstract
     specs — no allocation) and report the Graphi planning artifacts: node
     count, DAG width, best executor config, modelled makespan, critical path.
+    ``runtime`` is the sweep-wide :class:`repro.Runtime` so every cell lands
+    its planning artifacts in one session's caches (sim-only: the runtime
+    never spawns its pool here).
     """
     from repro import api as graphi
     from repro.core import TPUV5E
@@ -43,7 +46,7 @@ def graphi_record(cell, arch: str, shape_name: str) -> dict:
 
     with use_mesh(cell.ctx):
         exe = graphi.compile(
-            cell.fn, *cell.args, hw=TPUV5E, backend="sim",
+            cell.fn, *cell.args, hw=TPUV5E, backend="sim", runtime=runtime,
             name=f"{arch}.{shape_name}",
         )
     g = exe.graph
@@ -61,7 +64,8 @@ def graphi_record(cell, arch: str, shape_name: str) -> dict:
 
 
 def run_cell(arch: str, shape_name: str, mesh, *, want_roofline: bool,
-             want_graphi: bool = True, verbose: bool = False) -> dict:
+             want_graphi: bool = True, verbose: bool = False,
+             runtime=None) -> dict:
     rec: dict = {"arch": arch, "shape": shape_name, "mesh": describe_mesh(mesh)}
     reason = skip_reason(arch, shape_name)
     if reason:
@@ -147,7 +151,7 @@ def run_cell(arch: str, shape_name: str, mesh, *, want_roofline: bool,
         # independent of the XLA compile result: a capture failure degrades
         # to a per-cell note, never a failed cell
         try:
-            rec["graphi"] = graphi_record(cell, arch, shape_name)
+            rec["graphi"] = graphi_record(cell, arch, shape_name, runtime=runtime)
         except Exception as e:  # noqa: BLE001
             rec["graphi_error"] = f"{type(e).__name__}: {e}"
     return rec
@@ -203,12 +207,19 @@ def main() -> int:
     if args.mesh in ("multipod", "both"):
         meshes.append((make_production_mesh(multi_pod=True), False))
 
+    # one Runtime for the whole sweep: every cell's Graphi record shares its
+    # planning caches (sim backend — the executor pool stays lazy/unspawned)
+    import repro
+    runtime = repro.Runtime()
+    repro.set_default_runtime(runtime)
+
     records = []
     for mesh, want_roofline in meshes:
         for arch in archs:
             for shape in shapes:
                 rec = run_cell(arch, shape, mesh, want_roofline=want_roofline,
-                               want_graphi=not args.no_graphi, verbose=args.verbose)
+                               want_graphi=not args.no_graphi, verbose=args.verbose,
+                               runtime=runtime)
                 records.append(rec)
                 line = summarize([rec]).splitlines()[0]
                 print(line, flush=True)

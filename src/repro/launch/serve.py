@@ -113,6 +113,12 @@ def main() -> int:
                    default="static",
                    help="decode-graph runtime: compiled static host plan "
                         "(default) or the per-op dynamic scheduler")
+    p.add_argument("--runtime-workers", type=int, default=None,
+                   help="executor-thread count of the process Runtime "
+                        "(default: machine core count)")
+    p.add_argument("--calibration-store", default=None,
+                   help="JSON path backing the Runtime's calibration store "
+                        "(measured op costs survive restarts)")
     p.add_argument("--temperature", type=float, default=0.0)
     args = p.parse_args()
 
@@ -125,10 +131,17 @@ def main() -> int:
         temperature=args.temperature,
     )
     if args.continuous:
+        # one process-wide Runtime: the engine leases its calibrated
+        # executor width from it per step instead of owning a pool
+        import repro
+        runtime = repro.Runtime(args.runtime_workers,
+                                calibration_path=args.calibration_store)
+        repro.set_default_runtime(runtime)
         engine = ContinuousEngine(cfg, params, scfg, max_executors=args.max_executors,
+                                  runtime=runtime,
                                   decode_host_mode=args.decode_host_mode)
-        print(f"continuous engine: {engine.pool.n_executors} executors "
-              f"(profiled best {engine.profile.best_config}), "
+        print(f"continuous engine: {engine.n_executors} executors leased of "
+              f"{runtime.n_workers} (profiled best {engine.profile.best_config}), "
               f"{engine.capacity} slots, decode={engine.decode_host_mode}")
     else:
         engine = ServeEngine(cfg, params, scfg)

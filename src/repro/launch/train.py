@@ -36,10 +36,32 @@ def main() -> int:
     p.add_argument("--log-every", type=int, default=10)
     p.add_argument("--data", default="bigram", choices=("bigram", "uniform", "copy"))
     p.add_argument("--mesh", default=None, help="e.g. '2x4' => data=2, model=4")
+    p.add_argument("--no-graphi", action="store_true",
+                   help="skip the Graphi capture/schedule of the loss graph")
+    p.add_argument("--calibration-store", default=None,
+                   help="JSON path backing the process Runtime's calibration "
+                        "store (shared with any serve engine in this process)")
     args = p.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     shape = ShapeSpec("cli", args.seq, args.batch, "train")
+
+    # the process-wide Runtime: the Graphi view of the loss graph compiles
+    # through it (shared schedule caches + persistent calibration), and any
+    # host-backend execution in this process leases its executors
+    import repro
+    runtime = repro.Runtime(calibration_path=args.calibration_store)
+    repro.set_default_runtime(runtime)
+    scheduled_makespan = None
+    if not args.no_graphi:
+        from repro.train.step import compile_lm_loss
+
+        exe = compile_lm_loss(cfg, shape, backend="sim", runtime=runtime)
+        scheduled_makespan = exe.schedule.makespan
+        print(f"graphi: loss graph {len(exe.graph)} nodes, width "
+              f"{exe.graph.width()}, {exe.schedule.n_executors}x"
+              f"{exe.schedule.team_size} executors, scheduled makespan "
+              f"{scheduled_makespan * 1e3:.2f} ms ({runtime.describe()})")
 
     from repro.optim.adamw import AdamWConfig
 
@@ -88,6 +110,7 @@ def main() -> int:
             log_every=args.log_every,
         ),
         checkpoint=ckpt,
+        scheduled_makespan=scheduled_makespan,
     )
     report = trainer.run()
     for rec in report.history:

@@ -1,0 +1,466 @@
+"""``repro.Runtime`` — one process-wide runtime that owns executors,
+calibration, and admission for every graph.
+
+The paper's core claim is that concurrent operations must share a manycore
+CPU *without interference*.  Before this module, every entry point — a
+pool-less :class:`~repro.api.Executable`, the serve engine, the trainer,
+each bench script — allocated its **own** executor threads and re-measured
+its own calibration, so two executables in one process oversubscribed the
+cores and repeated identical measurements.  A :class:`Runtime` consolidates
+all of that per-process state:
+
+* **One** :class:`~repro.core.engine.ExecutorPool` sized to the machine.
+  Every graph run in the process executes on these threads; nothing else
+  spawns executors.
+* A persistent :class:`CalibrationStore` — measured per-op costs keyed by a
+  structural :func:`graph_signature` — with JSON save/load, so
+  ``Executable.calibrate`` survives process restarts and is shared across
+  executables of the same graph.
+* The per-(graph, width) ``StaticHostPlan`` / ``HostScheduler`` caches, so
+  two executables over one graph freeze placements once.
+* An **admission layer**: each run asks for an :class:`ExecutorLease` — a
+  *disjoint subset* of the pool's executors sized by the run's calibrated
+  CPF width.  CPF scheduling happens inside the lease; leases queue (FIFO,
+  no barging) rather than oversubscribe, so a decode step and a train step
+  share the pool with bounded interference instead of fighting for threads.
+
+``repro.compile(...)`` is sugar over ``default_runtime().compile(...)``;
+components that want an isolated pool (tests, benches) construct their own
+``Runtime`` and pass it around.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+from collections import deque
+from typing import Any, Callable, Mapping
+
+from repro.core.cost_model import KNL7250, HardwareModel
+from repro.core.engine import ExecutorPool
+from repro.core.graph import Graph
+
+__all__ = [
+    "CalibrationStore",
+    "ExecutorLease",
+    "Runtime",
+    "default_runtime",
+    "graph_signature",
+    "set_default_runtime",
+]
+
+
+def graph_signature(graph: Graph, variant: str = "") -> str:
+    """Stable structural hash of a graph: node names, kinds, deps, and the
+    roofline stats that drive the cost model.
+
+    Two captures of the same function at the same shapes produce the same
+    signature, so a :class:`CalibrationStore` entry written by one process
+    seeds the schedule of the next.  ``variant`` salts the key for
+    executions whose per-op cost differs at identical structure (e.g.
+    ``jit_nodes=True`` wraps every fn in ``jax.jit`` — dispatch cost, not
+    flops, dominates tiny ops, so jitted and eager tables must not mix).
+    """
+    h = hashlib.sha256()
+    h.update(variant.encode())
+    for name in graph.names:
+        nd = graph[name]
+        h.update(
+            f"{name}|{nd.kind}|{nd.flops:.6g}|{nd.bytes_in:.6g}|"
+            f"{nd.bytes_out:.6g}|{','.join(nd.deps)}\n".encode()
+        )
+    return h.hexdigest()
+
+
+class CalibrationStore:
+    """Measured op-cost tables keyed by :func:`graph_signature`.
+
+    Entries are ``{op_name: seconds}`` dicts from
+    :func:`~repro.core.profiler.measure_op_costs`.  With a ``path`` the
+    store loads existing entries at construction and autosaves (atomic
+    tmp+rename) on every :meth:`put`, so ``calibrate()`` results survive
+    restarts.  Thread-safe: a serve engine calibrating and a trainer
+    reading may race.
+    """
+
+    _FORMAT = 1
+
+    def __init__(self, path: str | None = None):
+        self.path = path
+        self._entries: dict[str, dict[str, float]] = {}
+        self._lock = threading.Lock()
+        self._io_lock = threading.Lock()   # serializes concurrent save()s
+        if path is not None and os.path.exists(path):
+            self.load(path)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, signature: str) -> bool:
+        return signature in self._entries
+
+    def get(self, signature: str) -> dict[str, float] | None:
+        with self._lock:
+            costs = self._entries.get(signature)
+            return dict(costs) if costs is not None else None
+
+    def put(self, signature: str, costs: Mapping[str, float]) -> None:
+        with self._lock:
+            self._entries[signature] = {k: float(v) for k, v in costs.items()}
+        if self.path is not None:
+            self.save(self.path)
+
+    def save(self, path: str | None = None) -> str:
+        path = path if path is not None else self.path
+        if path is None:
+            raise ValueError("CalibrationStore has no path; pass save(path)")
+        with self._lock:
+            payload = {"format": self._FORMAT, "entries": self._entries}
+            blob = json.dumps(payload, indent=1, sort_keys=True)
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        # pid + thread id: concurrent savers (two executables calibrating
+        # on one runtime) must never truncate each other's tmp file; the
+        # io lock additionally orders the replaces so the newest snapshot
+        # wins rather than interleaving
+        tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+        with self._io_lock:
+            with open(tmp, "w") as f:
+                f.write(blob)
+            os.replace(tmp, path)
+        return path
+
+    def load(self, path: str | None = None) -> int:
+        """Merge entries from ``path`` (disk wins); returns the entry count."""
+        path = path if path is not None else self.path
+        if path is None:
+            raise ValueError("CalibrationStore has no path; pass load(path)")
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("format") != self._FORMAT:
+            raise ValueError(
+                f"calibration store {path!r} has format "
+                f"{payload.get('format')!r}, expected {self._FORMAT}"
+            )
+        entries = {
+            sig: {k: float(v) for k, v in costs.items()}
+            for sig, costs in payload["entries"].items()
+        }
+        with self._lock:
+            self._entries.update(entries)
+            return len(self._entries)
+
+
+class _Admission:
+    """FIFO executor leasing over one pool's executor ids.
+
+    ``acquire(width)`` blocks until this request is at the **head** of the
+    queue *and* ``width`` executors are free — strict FIFO, so a wide
+    request is never starved by narrow ones barging past it, and total
+    leased executors never exceed the pool (no oversubscription, the whole
+    point of the admission layer).
+    """
+
+    def __init__(self, n_executors: int):
+        self.n_executors = n_executors
+        self._free: set[int] = set(range(n_executors))
+        self._cond = threading.Condition()
+        self._queue: deque[object] = deque()
+
+    @property
+    def n_free(self) -> int:
+        with self._cond:
+            return len(self._free)
+
+    @property
+    def n_waiting(self) -> int:
+        with self._cond:
+            return len(self._queue)
+
+    def acquire(
+        self,
+        width: int,
+        timeout: float | None = None,
+        prefer: tuple[int, ...] = (),
+    ) -> tuple[int, ...]:
+        if width < 1:
+            raise ValueError(f"need width >= 1, got {width}")
+        width = min(width, self.n_executors)
+        ticket = object()
+        with self._cond:
+            self._queue.append(ticket)
+            try:
+                ok = self._cond.wait_for(
+                    lambda: self._queue[0] is ticket and len(self._free) >= width,
+                    timeout=timeout,
+                )
+            except BaseException:
+                # e.g. KeyboardInterrupt mid-wait: an orphaned ticket at the
+                # queue head would wedge strict-FIFO admission forever
+                self._queue.remove(ticket)
+                self._cond.notify_all()
+                raise
+            if not ok:
+                self._queue.remove(ticket)
+                self._cond.notify_all()
+                raise TimeoutError(
+                    f"no lease of width {width} within {timeout}s "
+                    f"({len(self._free)} free, {len(self._queue)} waiting)"
+                )
+            self._queue.popleft()
+            # sticky leases: grant the caller's previous executors when they
+            # are free (warm threads / cache affinity — a replayed graph
+            # should not migrate between executors run to run), then fill
+            # from the free set
+            picked = [e for e in prefer if e in self._free][:width]
+            if len(picked) < width:
+                rest = sorted(self._free.difference(picked))
+                picked.extend(rest[: width - len(picked)])
+            ids = tuple(sorted(picked))
+            self._free.difference_update(ids)
+            # the next waiter may already be satisfiable (narrower request)
+            self._cond.notify_all()
+            return ids
+
+    def release(self, ids: tuple[int, ...]) -> None:
+        with self._cond:
+            self._free.update(ids)
+            self._cond.notify_all()
+
+
+class ExecutorLease:
+    """A disjoint slice of a :class:`Runtime`'s executor pool.
+
+    Quacks like an :class:`~repro.core.engine.ExecutorPool` of
+    ``len(executor_ids)`` executors — ``submit`` / ``submit_segments`` /
+    ``qsize`` remap local executor indices onto the leased global ids — so
+    both host runtimes (the dynamic :class:`HostScheduler` and compiled
+    :class:`StaticHostPlan` segments) run *inside* the lease unchanged.
+    Segment atomicity is inherited from the underlying pool's lock, so a
+    leased plan still cannot cross-deadlock with anything else on the pool.
+
+    ``close()`` aliases :meth:`release` so a lease can stand in anywhere a
+    pool is owned; releasing twice is a no-op.
+    """
+
+    def __init__(self, runtime: "Runtime", executor_ids: tuple[int, ...]):
+        self._runtime = runtime
+        self._pool = runtime.pool
+        self.executor_ids = executor_ids
+        self.n_executors = len(executor_ids)
+        self._released = False
+
+    def submit(self, ex: int, name: str, task: Callable[[], Any],
+               reply: Any, t_origin: float) -> None:
+        self._pool.submit(self.executor_ids[ex], name, task, reply, t_origin)
+
+    def submit_segments(self, items: list, reply: Any, t_origin: float) -> None:
+        self._pool.submit_segments(
+            [(self.executor_ids[e], name, task) for e, name, task in items],
+            reply, t_origin,
+        )
+
+    def qsize(self, ex: int) -> int:
+        return self._pool.qsize(self.executor_ids[ex])
+
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self._runtime._admission.release(self.executor_ids)
+
+    # pool-interface compatibility: components that "own" their pool call
+    # close(); for a lease that means giving the executors back
+    close = release
+
+    def __enter__(self) -> "ExecutorLease":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.release()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"ExecutorLease(ids={self.executor_ids}, "
+                f"released={self._released})")
+
+
+def _machine_workers() -> int:
+    # at least 2 so every machine exercises real multi-executor placement
+    return max(2, os.cpu_count() or 2)
+
+
+class Runtime:
+    """Process-wide session owning executors, calibration, and admission.
+
+    Parameters
+    ----------
+    n_workers:
+        Executor-thread count of the single shared pool (default: the
+        machine's core count, floor 2).  This is the hard bound the
+        admission layer enforces: total leased executors never exceed it.
+    hw:
+        Default :class:`HardwareModel` for ``compile`` (cost model +
+        config-search worker count).
+    calibration_path:
+        JSON file backing the :class:`CalibrationStore`.  Loaded at
+        construction when it exists; autosaved on every ``calibrate()``.
+
+    The executor pool is created lazily on first host execution, so
+    sim-only runtimes (the dry-run sweep) never spawn threads.
+    """
+
+    def __init__(
+        self,
+        n_workers: int | None = None,
+        *,
+        hw: HardwareModel = KNL7250,
+        reserved_workers: int = 2,
+        calibration_path: str | None = None,
+    ):
+        self.n_workers = n_workers if n_workers is not None else _machine_workers()
+        if self.n_workers < 1:
+            raise ValueError(f"need >= 1 worker, got {self.n_workers}")
+        self.hw = hw
+        self.reserved_workers = reserved_workers
+        self.calibration = CalibrationStore(calibration_path)
+        self._pool: ExecutorPool | None = None
+        self._pool_lock = threading.Lock()
+        self._admission = _Admission(self.n_workers)
+        self._cache_lock = threading.Lock()
+        self._closed = False
+
+    # -- executors + admission ----------------------------------------------
+    @property
+    def pool(self) -> ExecutorPool:
+        """The one shared pool (created on first use)."""
+        if self._pool is None:
+            with self._pool_lock:
+                if self._pool is None:
+                    if self._closed:
+                        raise RuntimeError("Runtime is closed")
+                    self._pool = ExecutorPool(self.n_workers)
+        return self._pool
+
+    def lease(
+        self,
+        width: int,
+        timeout: float | None = None,
+        prefer: tuple[int, ...] = (),
+    ) -> ExecutorLease:
+        """Lease ``width`` executors (clamped to ``n_workers``); blocks in
+        FIFO order until that many are free.  ``prefer`` are the caller's
+        previous executor ids — granted first when free, so a replayed
+        graph keeps warm executor threads instead of migrating.  Use as a
+        context manager or call ``release()``; every host run through this
+        runtime holds exactly one lease for its duration."""
+        if self._closed:
+            raise RuntimeError("Runtime is closed")
+        self.pool  # materialize before handing out ids
+        ids = self._admission.acquire(width, timeout=timeout, prefer=prefer)
+        return ExecutorLease(self, ids)
+
+    @property
+    def leased_executors(self) -> int:
+        """Executors currently out on leases (observability/tests)."""
+        return self.n_workers - self._admission.n_free
+
+    # -- planning caches -----------------------------------------------------
+    def cached(self, graph: Graph, key: tuple, build: Callable[[], Any]) -> Any:
+        """Per-graph artifact cache (plans, host schedulers) the runtime
+        mediates.
+
+        ``key`` must encode everything the artifact depends on besides the
+        graph itself (width, team size, policy, cost fingerprint).  The
+        store rides on the graph object (cached plans/schedulers hold a
+        strong reference to their graph, so any runtime-side map would pin
+        the graph alive forever — this way a dropped graph frees its
+        artifacts with it, and two executables over one graph share).
+        Entries for a graph are dropped wholesale by :meth:`invalidate`
+        (an executable re-profiled with new measured costs).
+        """
+        with self._cache_lock:
+            per_graph = graph.__dict__.setdefault("_graphi_artifacts", {})
+            hit = per_graph.get(key)
+        if hit is not None:
+            return hit
+        made = build()
+        with self._cache_lock:
+            return per_graph.setdefault(key, made)
+
+    def invalidate(self, graph: Graph) -> None:
+        with self._cache_lock:
+            graph.__dict__.pop("_graphi_artifacts", None)
+
+    # -- compile -------------------------------------------------------------
+    def compile(self, target: Any, *specs: Any, **kw: Any):
+        """``repro.compile`` bound to this runtime: the returned
+        :class:`~repro.api.Executable` executes on leases from this
+        runtime's pool, seeds its cost model from the calibration store,
+        and writes ``calibrate()`` results back to it."""
+        from repro import api
+
+        kw.setdefault("hw", self.hw)
+        kw.setdefault("reserved_workers", self.reserved_workers)
+        return api.compile(target, *specs, runtime=self, **kw)
+
+    # -- lifecycle -----------------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self) -> None:
+        """Close the pool and persist the calibration store (idempotent).
+        In-flight leases finish their queued work (pool close drains
+        FIFO-before-sentinel); new leases and compiles raise."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._pool is not None:
+            self._pool.close()
+        if self.calibration.path is not None:
+            self.calibration.save()
+
+    def __enter__(self) -> "Runtime":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+    def describe(self) -> str:
+        return (
+            f"Runtime(n_workers={self.n_workers}, hw={self.hw.name}, "
+            f"pool={'live' if self._pool is not None else 'lazy'}, "
+            f"leased={self.leased_executors}, "
+            f"calibrations={len(self.calibration)})"
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return self.describe()
+
+
+# -- the process-wide default ------------------------------------------------
+_default: Runtime | None = None
+_default_lock = threading.Lock()
+
+
+def default_runtime() -> Runtime:
+    """The process-wide :class:`Runtime` behind bare ``repro.compile``.
+
+    Created on first use (machine-sized pool, no calibration path); if the
+    current default was closed, a fresh one replaces it.
+    """
+    global _default
+    with _default_lock:
+        if _default is None or _default.closed:
+            _default = Runtime()
+        return _default
+
+
+def set_default_runtime(rt: Runtime | None) -> Runtime | None:
+    """Swap the process default (tests, or an app that wants one configured
+    runtime everywhere); returns the previous one (not closed)."""
+    global _default
+    with _default_lock:
+        prev, _default = _default, rt
+        return prev

@@ -5,12 +5,18 @@ DESIGN.md §6 describes): a persistent decode loop over a fixed-capacity
 per-slot KV cache (``transformer.init_cache(per_slot=True)``).  Each batch
 row is a request *slot* at its own decode position; new requests' prefills
 are admitted into free slots **between decode steps** — overlapped with the
-in-flight decode on the same executor pool — and a finished request frees
+in-flight decode on the same executors — and a finished request frees
 its slot immediately on EOS/budget, so no request ever stalls on a
 stranger's long prompt.  Prefill and decode are captured via
 ``repro.api.compile(backend="host")``; the profiler's configuration search
-picks the executor count at engine construction, and both graphs submit to
-one persistent :class:`~repro.core.engine.ExecutorPool`.
+picks the executor count at engine construction.
+
+The engine owns **no executor threads**: each :meth:`step` leases its
+calibrated executor width from a :class:`~repro.runtime.Runtime` (the
+process default unless one is passed) and runs decode + admission prefills
+inside that lease, so a serve engine and a trainer — or two engines —
+share one machine-sized pool with bounded interference.  An explicit
+``pool=`` reproduces the old shared-pool wiring and bypasses admission.
 
 :class:`ServeEngine` — the throughput-oriented wave batcher kept as the
 baseline: requests are grouped into waves of equal prompt length, one
@@ -24,6 +30,7 @@ from __future__ import annotations
 
 import threading
 from collections import deque
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Sequence
 
@@ -35,6 +42,7 @@ from repro.configs.base import ModelConfig
 from repro.core.cost_model import KNL7250, HardwareModel
 from repro.core.engine import ExecutorPool
 from repro.models import transformer
+from repro.runtime import Runtime, default_runtime
 from repro.serve.step import make_decode_step, make_prefill_step, sample_tokens
 
 __all__ = ["Request", "ServeConfig", "ServeEngine", "ContinuousEngine"]
@@ -203,6 +211,7 @@ class ContinuousEngine(_SamplerMixin):
         hw: HardwareModel = KNL7250,
         max_executors: int | None = None,
         pool: ExecutorPool | None = None,
+        runtime: Runtime | None = None,
         decode_host_mode: str = "static",
     ):
         if cfg.frontend:
@@ -219,14 +228,22 @@ class ContinuousEngine(_SamplerMixin):
         self.cache = transformer.init_cache(cfg, self.capacity, scfg.max_len, per_slot=True)
         self._zero_sub_cache = transformer.init_cache(cfg, 1, scfg.max_len, per_slot=True)
 
+        # executors come from the process Runtime (leased per step) unless
+        # the caller hands an explicit shared pool, which bypasses admission
+        self.pool = pool
+        self.runtime = runtime if runtime is not None else (
+            None if pool is not None else default_runtime())
+
         # the decode graph is *fixed* (one shape, replayed once per token):
         # the compiled static host plan takes the scheduler off its hot path
         # entirely.  Prefill graphs stay dynamic — their shapes vary per
-        # prompt length and they share the pool with the in-flight decode.
+        # prompt length and they share the step's executors with the
+        # in-flight decode.
         tok_spec = jax.ShapeDtypeStruct((self.capacity, 1), jnp.int32)
         self._decode_exe = api.compile(
             make_decode_step(cfg), params, self.cache, tok_spec,
             hw=hw, backend="host", jit_nodes=True, host_mode=decode_host_mode,
+            pool=pool, runtime=self.runtime,
             name=f"serve_decode[{cfg.name}]",
         )
         self.decode_host_mode = self._decode_exe.host_mode
@@ -236,23 +253,32 @@ class ContinuousEngine(_SamplerMixin):
         # a side effect).  Analytic flops misrank tiny jitted decode ops —
         # their cost is dispatch, not arithmetic — and the static plan
         # freezes the resulting placement, so it must come from real
-        # timings.  Optionally bounded: serving should not claim the whole
-        # machine.
-        self.profile = self._decode_exe.calibrate(
-            params, jax.tree.map(jnp.zeros_like, self.cache),
-            jnp.full((self.capacity, 1), scfg.pad_id, jnp.int32),
-            max_executors=max_executors)
+        # timings.  A runtime calibration-store hit (same decode graph, a
+        # prior engine or process) skips the measurement entirely.
+        # Optionally bounded: serving should not claim the whole machine.
+        if self._decode_exe.calibrated:
+            kw = ({"max_executors": max_executors}
+                  if max_executors is not None else {})
+            self.profile = self._decode_exe.profile_with(**kw)
+        else:
+            self.profile = self._decode_exe.calibrate(
+                params, jax.tree.map(jnp.zeros_like, self.cache),
+                jnp.full((self.capacity, 1), scfg.pad_id, jnp.int32),
+                max_executors=max_executors)
         n_exec = self._decode_exe.planned_executors
         if max_executors is not None:
             n_exec = max(1, min(n_exec, max_executors))
-        self.pool = pool if pool is not None else ExecutorPool(n_exec)
-        self._own_pool = pool is None
-        self._decode_exe.pool = self.pool
+        if pool is not None:
+            n_exec = min(n_exec, pool.n_executors)
+        elif self.runtime is not None:
+            n_exec = min(n_exec, self.runtime.n_workers)
+        self.n_executors = n_exec
+        self._step_lease_ids: tuple[int, ...] = ()
         if self._decode_exe.host_mode == "static":
             # freeze the plan now (not on the first request) at the planned
-            # width — a shared pool wider than the calibrated config must
-            # not widen the placement
-            self._decode_exe.host_plan()
+            # width — a pool or runtime wider than the calibrated config
+            # must not widen the placement
+            self._decode_exe.host_plan(n_exec)
         self._team_size = self.profile.best_team_size
         self._prefill_exes: dict[int, api.Executable] = {}
 
@@ -277,14 +303,16 @@ class ContinuousEngine(_SamplerMixin):
         # executions compile per-shape kernels), so the serving loop runs at
         # steady-state cost from the first request on
         warm = jax.tree.map(jnp.zeros_like, self.cache)
-        logits, _ = self._decode_exe(params, warm, jnp.asarray(self._tokens))
-        if self._decode_exe.host_mode == "static":
-            # steps with admissions in flight fall back to the dynamic
-            # scheduler (_decode_once) — warm that path's state too
-            self._decode_exe.execute_host(
-                self._decode_exe.captured.bind(
-                    (params, warm, jnp.asarray(self._tokens))),
-                host_mode="dynamic")
+        with self._step_pool() as wpool:
+            logits, _ = self._run_exe(
+                self._decode_exe, (params, warm, jnp.asarray(self._tokens)),
+                pool=wpool)
+            if self._decode_exe.host_mode == "static":
+                # steps with admissions in flight fall back to the dynamic
+                # scheduler (_decode_once) — warm that path's state too
+                self._run_exe(
+                    self._decode_exe, (params, warm, jnp.asarray(self._tokens)),
+                    pool=wpool, host_mode="dynamic")
         sample_tokens(logits, cfg.vocab_size, scfg.temperature,
                       jax.random.key(0) if scfg.temperature > 0 else None)
         warm = self._insert(warm, self._zero_sub_cache, jnp.int32(0))
@@ -293,8 +321,9 @@ class ContinuousEngine(_SamplerMixin):
 
     # -- lifecycle -------------------------------------------------------------
     def close(self) -> None:
-        if self._own_pool:
-            self.pool.close()
+        """Nothing to release: the engine leases executors per step from the
+        runtime (an explicit ``pool`` is the caller's to close).  Kept so
+        engine call sites stay context-manager shaped."""
 
     def __enter__(self) -> "ContinuousEngine":
         return self
@@ -325,7 +354,31 @@ class ContinuousEngine(_SamplerMixin):
             self._prefill_exe(s)
 
     # -- internals -------------------------------------------------------------
-    def _prefill_exe(self, prompt_len: int):
+    def _step_pool(self):
+        """The executors one engine iteration runs on: the explicit shared
+        pool, or a fresh :class:`~repro.runtime.ExecutorLease` of the
+        engine's calibrated width — acquired at step start, released at
+        step end, so concurrent engines/trainers queue instead of
+        oversubscribing.  The previous step's executor ids are passed as
+        the affinity hint: the steady-state decode loop keeps its warm
+        executor threads."""
+        if self.pool is not None:
+            return nullcontext(self.pool)
+        lease = self.runtime.lease(self.n_executors,
+                                   prefer=self._step_lease_ids)
+        self._step_lease_ids = lease.executor_ids
+        return lease
+
+    def _run_exe(self, exe, args: tuple, *, pool, host_mode: str | None = None):
+        """Execute a captured engine graph on the step's executors and
+        unflatten to the fn's output pytree."""
+        res = exe.execute_host(
+            exe.captured.bind(args), n_executors=self.n_executors,
+            pool=pool, host_mode=host_mode,
+        )
+        return exe.captured.unflatten(res.outputs)
+
+    def _prefill_exe(self, prompt_len: int, pool=None):
         exe = self._prefill_exes.get(prompt_len)
         if exe is None:
             from repro import api
@@ -333,26 +386,29 @@ class ContinuousEngine(_SamplerMixin):
             tok_spec = {"tokens": jax.ShapeDtypeStruct((1, prompt_len), jnp.int32)}
             exe = api.compile(
                 make_prefill_step(self.cfg), self.params, self._zero_sub_cache, tok_spec,
-                hw=self.hw, backend="host", pool=self.pool, jit_nodes=True,
-                n_executors=self.pool.n_executors, team_size=self._team_size,
+                hw=self.hw, backend="host", pool=self.pool, runtime=self.runtime,
+                jit_nodes=True,
+                n_executors=self.n_executors, team_size=self._team_size,
                 name=f"serve_prefill[{self.cfg.name},S={prompt_len}]",
             )
             # first-call warmup, same reasoning as the decode graph
-            out = exe(self.params, self._zero_sub_cache,
-                      {"tokens": jnp.zeros((1, prompt_len), jnp.int32)})
+            out = self._run_exe(
+                exe, (self.params, self._zero_sub_cache,
+                      {"tokens": jnp.zeros((1, prompt_len), jnp.int32)}),
+                pool=pool)
             sample_tokens(out[0], self.cfg.vocab_size, self.scfg.temperature,
                           jax.random.key(0) if self.scfg.temperature > 0 else None)
             jax.block_until_ready(out[0])
             self._prefill_exes[prompt_len] = exe
         return exe
 
-    def _admit(self, req: Request, slot: int):
-        """Run the request's prefill graph (on the shared pool)."""
-        exe = self._prefill_exe(len(req.prompt))
-        logits, filled = exe(
-            self.params, self._zero_sub_cache,
-            {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]},
-        )
+    def _admit(self, req: Request, slot: int, pool=None):
+        """Run the request's prefill graph on the step's executors."""
+        exe = self._prefill_exe(len(req.prompt), pool=pool)
+        logits, filled = self._run_exe(
+            exe, (self.params, self._zero_sub_cache,
+                  {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}),
+            pool=pool)
         return req, slot, logits, filled
 
     def _install(self, req: Request, slot: int, logits, filled) -> None:
@@ -374,22 +430,20 @@ class ContinuousEngine(_SamplerMixin):
         else:
             self._tokens[slot, 0] = token
 
-    def _decode_once(self, *, overlapping_prefills: bool = False) -> None:
+    def _decode_once(self, pool, *, overlapping_prefills: bool = False) -> None:
         exe = self._decode_exe
+        host_mode = None
         if overlapping_prefills and exe.host_mode == "static":
-            # a static plan's segments hold every executor for the whole
-            # step, which would serialize the concurrent admission prefills
-            # behind the decode; the dynamic scheduler interleaves per-op,
-            # so steps with prefills in flight fall back to it.  Steady-state
-            # steps (the vast majority) replay the compiled plan.
-            inputs = exe.captured.bind(
-                (self.params, self.cache, jnp.asarray(self._tokens)))
-            res = exe.execute_host(inputs, host_mode="dynamic")
-            logits, self.cache = exe.captured.unflatten(res.outputs)
-        else:
-            logits, self.cache = exe(
-                self.params, self.cache, jnp.asarray(self._tokens)
-            )
+            # a static plan's segments hold every one of the step's
+            # executors for the whole decode, which would serialize the
+            # concurrent admission prefills behind it; the dynamic scheduler
+            # interleaves per-op, so steps with prefills in flight fall back
+            # to it.  Steady-state steps (the vast majority) replay the
+            # compiled plan.
+            host_mode = "dynamic"
+        logits, self.cache = self._run_exe(
+            exe, (self.params, self.cache, jnp.asarray(self._tokens)),
+            pool=pool, host_mode=host_mode)
         self.n_decode_steps += 1
         nxt = self._sample(logits)
         for i in range(self.capacity):
@@ -400,8 +454,9 @@ class ContinuousEngine(_SamplerMixin):
     def step(self) -> bool:
         """One engine iteration: admit into free slots, one decode step.
 
-        Admission prefills execute concurrently with the decode step on the
-        shared executor pool; their slots join the batch from the *next*
+        The step leases the engine's executors once (:meth:`_step_pool`);
+        admission prefills execute concurrently with the decode step on
+        those executors and their slots join the batch from the *next*
         step.  Returns whether work remains.
         """
         self.n_steps += 1
@@ -411,29 +466,31 @@ class ContinuousEngine(_SamplerMixin):
             admits.append((self.pending.popleft(), free.pop(0)))
         decoding = any(s is not None for s in self.slots)
 
-        if admits and decoding:
-            box: dict = {}
+        with self._step_pool() as pool:
+            if admits and decoding:
+                box: dict = {}
 
-            def prefill_worker() -> None:
-                try:
-                    box["res"] = [self._admit(r, s) for r, s in admits]
-                except BaseException as e:  # noqa: BLE001 — re-raised below
-                    box["err"] = e
+                def prefill_worker() -> None:
+                    try:
+                        box["res"] = [self._admit(r, s, pool=pool)
+                                      for r, s in admits]
+                    except BaseException as e:  # noqa: BLE001 — re-raised below
+                        box["err"] = e
 
-            th = threading.Thread(target=prefill_worker, name="serve-prefill")
-            th.start()
-            self._decode_once(overlapping_prefills=True)
-            th.join()
-            if "err" in box:
-                raise box["err"]
-            self.n_overlapped_prefills += len(admits)
-            for item in box["res"]:
-                self._install(*item)
-        elif admits:
-            for r, s in admits:
-                self._install(*self._admit(r, s))
-        elif decoding:
-            self._decode_once()
+                th = threading.Thread(target=prefill_worker, name="serve-prefill")
+                th.start()
+                self._decode_once(pool, overlapping_prefills=True)
+                th.join()
+                if "err" in box:
+                    raise box["err"]
+                self.n_overlapped_prefills += len(admits)
+                for item in box["res"]:
+                    self._install(*item)
+            elif admits:
+                for r, s in admits:
+                    self._install(*self._admit(r, s, pool=pool))
+            elif decoding:
+                self._decode_once(pool)
         return self.has_work
 
     def run(self) -> list[Request]:

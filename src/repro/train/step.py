@@ -70,6 +70,7 @@ def compile_lm_loss(
     remat: bool = False,
     grad: bool = False,
     unroll_layers: bool = True,
+    runtime=None,
     **kw: Any,
 ):
     """``repro.api.compile`` the loss graph of a model at an input shape.
@@ -78,7 +79,10 @@ def compile_lm_loss(
     ``lax.scan`` over layers so the scheduler sees the per-layer operator
     DAG (leave it off to call the executable with real scanned params).
     ``grad=True`` captures ``value_and_grad`` instead — the paper's "one
-    complete execution = one training iteration" graph.
+    complete execution = one training iteration" graph.  ``runtime`` binds
+    the executable to a shared :class:`repro.Runtime` (the process default
+    otherwise), so a train step run next to a serve engine leases executors
+    from — and shares calibration with — the same session.
     """
     from repro import api as graphi
     from repro.core import KNL7250
@@ -92,7 +96,7 @@ def compile_lm_loss(
     batch_spec = model_api.input_specs(cfg, shape, kind="train")
     return graphi.compile(
         fn, params_spec, batch_spec,
-        hw=hw or KNL7250, backend=backend,
+        hw=hw or KNL7250, backend=backend, runtime=runtime,
         name=f"{cfg.name}.lm_loss" + ("+grad" if grad else ""),
         **kw,
     )

@@ -1,6 +1,6 @@
-"""The redesigned public API: ``repro.api.compile`` / ``Executable``, the
-deprecated ``GraphiEngine`` shim, and the HostScheduler dispatch redesign
-(multi-completion drain + honored ``buffer_depth``).
+"""The redesigned public API: ``repro.api.compile`` / ``Executable`` over
+the process-wide :class:`repro.Runtime`, and the HostScheduler dispatch
+redesign (multi-completion drain + honored ``buffer_depth``).
 """
 import threading
 import time
@@ -11,7 +11,7 @@ import pytest
 
 import repro
 from repro import api as graphi
-from repro.core import KNL7250, Graph, GraphiEngine, HostScheduler, SimResult
+from repro.core import KNL7250, Graph, HostScheduler, SimResult
 
 
 def stat_diamond() -> Graph:
@@ -108,28 +108,17 @@ def test_describe_mentions_config_and_path():
 
 
 # ---------------------------------------------------------------------------
-# GraphiEngine: deprecated shim over Executable
+# GraphiEngine: removed after its PR-2 deprecation cycle
 # ---------------------------------------------------------------------------
 
-def test_engine_shim_warns_and_matches_api():
-    g = stat_diamond()
-    with pytest.warns(DeprecationWarning):
-        eng = GraphiEngine(g, KNL7250)
-    exe = graphi.compile(g, hw=KNL7250, backend="sim")
-    assert eng.profile().best_config == exe.profile.best_config
-    assert eng.schedule().placements == exe.schedule.placements
-    assert eng.static_slots() == exe.slots
+def test_graphi_engine_shim_is_gone():
+    import repro.core
+    import repro.core.engine
 
-
-def test_engine_shim_execute_host_still_runs():
-    g = Graph("run")
-    g.add_op("x", fn=lambda: jnp.ones((8, 8)))
-    g.add_op("y", deps=("x",), fn=lambda a: a * 2, flops=64)
-    g.add_op("z", deps=("y",), fn=lambda a: a.sum(), flops=64)
-    with pytest.warns(DeprecationWarning):
-        eng = GraphiEngine(g, KNL7250)
-    res = eng.execute_host()
-    assert float(res.outputs["z"]) == 128.0
+    with pytest.raises(AttributeError):
+        repro.GraphiEngine  # noqa: B018 — the attribute access is the test
+    assert not hasattr(repro.core, "GraphiEngine")
+    assert not hasattr(repro.core.engine, "GraphiEngine")
 
 
 # ---------------------------------------------------------------------------

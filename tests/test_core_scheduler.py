@@ -8,7 +8,6 @@ from repro.core import (
     KNL7250,
     TPUV5E,
     Graph,
-    GraphiEngine,
     HostScheduler,
     OpNode,
     SimConfig,
@@ -230,13 +229,14 @@ def test_host_scheduler_property_random_dags(n_exec, seed):
         np.testing.assert_allclose(out[key], ref[key], rtol=1e-10)
 
 
-# -------------------------- engine facade ----------------------------------
-def test_engine_end_to_end():
+# -------------------------- api end to end ---------------------------------
+def test_executable_end_to_end():
+    from repro import api as graphi
+
     g = recurrence_graph(4, 6, flops_per_cell=3e7, bytes_per_cell=1e6)
-    eng = GraphiEngine(g, KNL7250)
-    p = eng.profile()
-    assert p.best_makespan <= sequential_makespan(KNL7250, g, eng.usable_workers)
-    s = eng.schedule()
+    exe = graphi.compile(g, hw=KNL7250, backend="sim")
+    p = exe.profile
+    assert p.best_makespan <= sequential_makespan(KNL7250, g, exe.usable_workers)
+    s = exe.schedule
     s.validate(g)
-    slots = eng.static_slots()
-    assert sum(map(len, slots)) == len(g)
+    assert sum(map(len, exe.slots)) == len(g)

@@ -1,0 +1,398 @@
+"""The process-wide :class:`repro.Runtime` (ISSUE 5): executor leasing with
+FIFO admission, the persistent calibration store, runtime-owned plan caches,
+concurrent executables bounded by one pool, and the idempotent
+segment-safe ``ExecutorPool.close``."""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import KNL7250, Graph, compile_host_plan, make_schedule
+from repro.core.engine import ExecutorPool
+from repro.core.static_host import layered_graph as layered
+from repro.runtime import (
+    CalibrationStore,
+    Runtime,
+    default_runtime,
+    graph_signature,
+    set_default_runtime,
+)
+
+
+def _executor_threads():
+    return {t for t in threading.enumerate()
+            if t.name.startswith("graphi-executor") and t.is_alive()}
+
+
+# ---------------------------------------------------------------------------
+# graph signatures + calibration store
+# ---------------------------------------------------------------------------
+
+def test_graph_signature_is_structural():
+    assert graph_signature(layered()) == graph_signature(layered())
+    assert graph_signature(layered(L=5)) != graph_signature(layered())
+    # jitted node fns time differently at identical structure: the variant
+    # salt keeps their measured tables apart
+    assert graph_signature(layered(), variant="jit") != graph_signature(layered())
+
+
+def test_calibration_store_save_load(tmp_path):
+    path = str(tmp_path / "cal.json")
+    store = CalibrationStore(path)
+    store.put("sig-a", {"op1": 1e-3, "op2": 2e-3})
+    assert "sig-a" in store                       # autosaved on put
+    fresh = CalibrationStore(path)
+    assert fresh.get("sig-a") == {"op1": 1e-3, "op2": 2e-3}
+    assert fresh.get("sig-b") is None
+
+
+def test_calibration_store_rejects_unknown_format(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"format": 99, "entries": {}}))
+    with pytest.raises(ValueError, match="format"):
+        CalibrationStore(str(p))
+
+
+def test_calibrate_round_trips_through_a_fresh_runtime(tmp_path, monkeypatch):
+    """calibrate() -> save -> fresh Runtime load -> identical schedule and
+    host-plan placements without re-measuring (satellite 6)."""
+    path = str(tmp_path / "cal.json")
+    with Runtime(n_workers=2, calibration_path=path) as rt1:
+        exe = rt1.compile(layered(), backend="host", host_mode="static")
+        exe.calibrate(inputs={"x": 1.0})
+        placements = dict(exe.schedule.placements)
+        programs = exe.host_plan().programs
+        width = exe.host_plan().n_executors
+        measured = dict(exe._measured(exe.schedule.team_size))
+
+    # the fresh runtime must seed from the store, never measure again
+    monkeypatch.setattr(
+        "repro.api.measure_op_costs",
+        lambda *a, **k: pytest.fail("second runtime re-measured op costs"))
+    with Runtime(n_workers=2, calibration_path=path) as rt2:
+        exe2 = rt2.compile(layered(), backend="host", host_mode="static")
+        assert exe2.calibrated
+        assert dict(exe2._measured(exe2.schedule.team_size)) == measured
+        assert dict(exe2.schedule.placements) == placements
+        assert exe2.host_plan(width).programs == programs
+        # and the seeded executable still runs correctly on its leases
+        assert exe2.execute_host({"x": 2.0}).outputs == layered().execute({"x": 2.0})
+
+
+# ---------------------------------------------------------------------------
+# admission: FIFO leases over one pool
+# ---------------------------------------------------------------------------
+
+def test_lease_clamps_reuses_and_releases():
+    with Runtime(n_workers=2) as rt:
+        lease = rt.lease(100)                     # clamped to the pool
+        assert lease.n_executors == 2
+        assert rt.leased_executors == 2
+        lease.release()
+        lease.release()                           # idempotent
+        assert rt.leased_executors == 0
+        with rt.lease(1):
+            assert rt.leased_executors == 1
+        assert rt.leased_executors == 0
+
+
+def test_lease_timeout_raises():
+    with Runtime(n_workers=2) as rt:
+        with rt.lease(2):
+            with pytest.raises(TimeoutError):
+                rt.lease(1, timeout=0.05)
+
+
+def test_admission_is_fifo_no_barging():
+    with Runtime(n_workers=2) as rt:
+        order: list[str] = []
+        first = rt.lease(2)
+
+        def want(width, tag):
+            with rt.lease(width):
+                order.append(tag)
+                time.sleep(0.02)
+
+        wide = threading.Thread(target=want, args=(2, "wide"))
+        wide.start()
+        while rt._admission.n_waiting != 1:       # wide is queued
+            time.sleep(0.001)
+        narrow = threading.Thread(target=want, args=(1, "narrow"))
+        narrow.start()
+        while rt._admission.n_waiting != 2:       # narrow queued behind it
+            time.sleep(0.001)
+        first.release()
+        wide.join(timeout=5)
+        narrow.join(timeout=5)
+        # narrow would fit the moment one executor frees, but FIFO means the
+        # wide request at the head is served first — no starvation
+        assert order == ["wide", "narrow"]
+
+
+def test_lease_remaps_executor_indices():
+    g = layered(L=3, W=2)
+    plan = compile_host_plan(
+        g, make_schedule(g, KNL7250, n_executors=1, team_size=1))
+    with Runtime(n_workers=2) as rt:
+        low = rt.lease(1)                         # pins global executor 0
+        high = rt.lease(1)                        # the plan runs on global 1
+        assert low.executor_ids != high.executor_ids
+        try:
+            res = plan.run({"x": 4.0}, pool=high)
+            assert res.outputs == g.execute({"x": 4.0})
+        finally:
+            high.release()
+            low.release()
+
+
+def test_admission_survives_exception_mid_wait():
+    """An exception out of the condition wait (e.g. KeyboardInterrupt) must
+    not leave an orphaned ticket wedging strict-FIFO admission."""
+    with Runtime(n_workers=2) as rt:
+        holder = rt.lease(2)
+        adm = rt._admission
+        real_wait_for = adm._cond.wait_for
+        adm._cond.wait_for = lambda *a, **k: (_ for _ in ()).throw(
+            KeyboardInterrupt())
+        try:
+            with pytest.raises(KeyboardInterrupt):
+                adm.acquire(1)
+        finally:
+            adm._cond.wait_for = real_wait_for
+        assert adm.n_waiting == 0                 # no dead ticket at the head
+        holder.release()
+        with rt.lease(2):                         # admission still serves
+            pass
+
+
+def test_calibration_store_concurrent_puts_stay_loadable(tmp_path):
+    path = str(tmp_path / "cal.json")
+    store = CalibrationStore(path)
+
+    def put_many(tag):
+        for i in range(20):
+            store.put(f"{tag}-{i}", {"op": float(i)})
+
+    ths = [threading.Thread(target=put_many, args=(t,)) for t in ("a", "b")]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    fresh = CalibrationStore(path)                # the file is valid JSON
+    assert len(fresh) == 40
+
+
+def test_oversized_explicit_plan_fails_with_remedy():
+    g = layered()
+    with Runtime(n_workers=2) as rt:
+        exe = rt.compile(g, backend="host")
+        wide = compile_host_plan(
+            g, make_schedule(g, KNL7250, n_executors=4, team_size=1))
+        with pytest.raises(ValueError, match="recompile the plan"):
+            exe.execute_host({"x": 1.0}, plan=wide)
+
+
+def test_dropped_graph_releases_its_cached_plans():
+    import weakref
+
+    with Runtime(n_workers=2) as rt:
+        g = layered()
+        exe = rt.compile(g, backend="host", host_mode="static",
+                         n_executors=2, team_size=1)
+        exe.execute_host({"x": 1.0})
+        ref = weakref.ref(g)
+        del exe, g
+        import gc
+
+        gc.collect()
+        assert ref() is None                      # no runtime-side pin
+
+
+def test_closed_runtime_rejects_new_work():
+    rt = Runtime(n_workers=2)
+    rt.pool
+    rt.close()
+    rt.close()                                    # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        rt.lease(1)
+
+
+# ---------------------------------------------------------------------------
+# the default runtime behind bare repro.compile
+# ---------------------------------------------------------------------------
+
+def test_default_runtime_is_a_recreated_singleton():
+    prev = set_default_runtime(None)
+    try:
+        rt = default_runtime()
+        assert default_runtime() is rt
+        rt.close()
+        fresh = default_runtime()                 # closed default is replaced
+        assert fresh is not rt and not fresh.closed
+        fresh.close()
+    finally:
+        set_default_runtime(prev)
+
+
+def test_bare_compile_binds_the_default_runtime():
+    import jax.numpy as jnp
+
+    exe = repro.compile(lambda v: jnp.tanh(v) + v * 2, jnp.ones((8,)))
+    assert exe.runtime is repro.default_runtime()
+    out = exe(jnp.ones((8,)))
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(jnp.tanh(jnp.ones((8,))) + 2.0))
+    assert exe.runtime.leased_executors == 0      # returned after the run
+
+
+def test_runtime_shares_plans_across_executables():
+    g = layered()
+    with Runtime(n_workers=2) as rt:
+        e1 = rt.compile(g, backend="host", host_mode="static",
+                        n_executors=2, team_size=1)
+        e2 = rt.compile(g, backend="host", host_mode="static",
+                        n_executors=2, team_size=1)
+        assert e1.host_plan() is e2.host_plan()   # frozen once per (graph, width)
+        e1.profile_with()                         # invalidates the graph's entry
+        assert e1.host_plan() is not None
+
+
+# ---------------------------------------------------------------------------
+# concurrent executables on one Runtime (satellite: thread bound + parity)
+# ---------------------------------------------------------------------------
+
+def test_concurrent_decode_and_train_stay_bounded_and_bitexact():
+    """A decode-shaped plan replaying statically while a captured train-step
+    graph runs dynamically: total executor threads never exceed the
+    runtime's ``n_workers`` and both produce bit-exact outputs vs isolated
+    runs."""
+    import jax
+    import jax.numpy as jnp
+
+    def loss(params, x):
+        h = jnp.tanh(x @ params["w1"])
+        return jnp.sum(jnp.tanh(h @ params["w2"]) ** 2)
+
+    rng = np.random.default_rng(0)
+    params = {"w1": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32),
+              "w2": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+
+    baseline = _executor_threads()
+    with Runtime(n_workers=3) as rt:
+        dec_g = layered(L=8, W=3)
+        dec = rt.compile(dec_g, backend="host", host_mode="static",
+                         n_executors=2, team_size=1)
+        train = rt.compile(jax.value_and_grad(loss), params, x,
+                           backend="host")        # dynamic scheduler
+        # isolated references first (also warms captures/plans)
+        dec_ref = [dec.execute_host({"x": float(k)}).outputs["out"]
+                   for k in range(6)]
+        train_ref = jax.tree.leaves(train(params, x))
+
+        peak = {"threads": 0, "leased": 0}
+        stop = threading.Event()
+
+        def sampler():
+            while not stop.is_set():
+                peak["threads"] = max(
+                    peak["threads"], len(_executor_threads() - baseline))
+                peak["leased"] = max(peak["leased"], rt.leased_executors)
+                time.sleep(0.001)
+
+        outs: dict = {}
+
+        def run_dec():
+            outs["dec"] = [dec.execute_host({"x": float(k)}).outputs["out"]
+                           for k in range(6)]
+
+        def run_train():
+            outs["train"] = [jax.tree.leaves(train(params, x))
+                             for _ in range(4)]
+
+        ths = [threading.Thread(target=f) for f in (run_dec, run_train)]
+        smp = threading.Thread(target=sampler)
+        smp.start()
+        for t in ths:
+            t.start()
+        for t in ths:
+            t.join(timeout=60)
+        stop.set()
+        smp.join(timeout=5)
+        assert all(not t.is_alive() for t in ths)
+
+        assert peak["threads"] <= rt.n_workers == 3
+        assert peak["leased"] <= rt.n_workers
+        assert outs["dec"] == dec_ref
+        for got in outs["train"]:
+            for a, b in zip(got, train_ref):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# ExecutorPool.close: idempotent, safe with segments in flight (satellite)
+# ---------------------------------------------------------------------------
+
+def test_pool_close_is_idempotent_and_race_free():
+    pool = ExecutorPool(2)
+    pool.close()
+    pool.close()                                  # second close: no-op
+    pool2 = ExecutorPool(2)
+    errs: list[BaseException] = []
+
+    def closer():
+        try:
+            pool2.close()
+        except BaseException as e:  # noqa: BLE001 — the test is "no raise"
+            errs.append(e)
+
+    ths = [threading.Thread(target=closer) for _ in range(4)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join(timeout=10)
+    assert not errs
+    assert all(not t.is_alive() for t in pool2._threads)
+    with pytest.raises(RuntimeError, match="closed"):
+        pool2.submit(0, "late", lambda: 1, None, 0.0)
+
+
+def test_pool_close_with_segments_in_flight_completes_the_run():
+    """close() while a static plan's segments are executing must neither
+    hang nor raise from worker threads: queued work precedes the shutdown
+    sentinel, so the in-flight run completes and close returns."""
+    g = Graph("slowplan")
+    g.add_op("x", kind="input")
+    prev = "x"
+    for i in range(6):
+        for w in range(2):
+            g.add_op(f"l{i}w{w}", deps=(prev,), flops=1.0,
+                     fn=lambda v, w=w: (time.sleep(0.005), v + w)[1])
+        g.add_op(f"j{i}", deps=(f"l{i}w0", f"l{i}w1"), flops=1.0,
+                 fn=lambda a, b: a + b)
+        prev = f"j{i}"
+    plan = compile_host_plan(
+        g, make_schedule(g, KNL7250, n_executors=2, team_size=1))
+    oracle = g.execute({"x": 1.0})
+
+    pool = ExecutorPool(2)
+    box: dict = {}
+
+    def run():
+        try:
+            box["res"] = plan.run({"x": 1.0}, pool=pool)
+        except BaseException as e:  # noqa: BLE001 — inspected below
+            box["err"] = e
+
+    th = threading.Thread(target=run)
+    th.start()
+    time.sleep(0.01)                              # segments are mid-flight
+    pool.close()                                  # must not split the batch
+    th.join(timeout=15)
+    assert not th.is_alive(), "plan.run hung across pool.close()"
+    assert "err" not in box, box.get("err")
+    assert box["res"].outputs == oracle
+    pool.close()                                  # and again, idempotent

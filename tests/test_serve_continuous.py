@@ -168,7 +168,7 @@ def test_engine_honors_max_executors(model):
     cfg, params = model
     with ContinuousEngine(cfg, params, ServeConfig(max_batch=2, max_len=16),
                           max_executors=2) as eng:
-        assert eng.pool.n_executors <= 2
+        assert eng.n_executors <= 2
         assert all(n <= 2 for n, _ in eng.profile.config_makespans)
 
 

@@ -126,17 +126,18 @@ def test_wide_shared_pool_does_not_widen_the_plan():
         assert exe.execute_host({"x": 5}).outputs == g.execute({"x": 5})
 
 
-def test_poolless_static_executable_keeps_one_pool():
+def test_poolless_static_executable_leases_from_runtime():
     g = layered()
-    with repro.compile(g, hw=KNL7250, backend="host", host_mode="static",
-                       n_executors=2, team_size=1) as exe:
-        assert exe._auto_pool is None
-        assert exe.execute_host({"x": 1}).outputs == g.execute({"x": 1})
-        auto = exe._auto_pool
-        assert auto is not None                     # owned, persistent...
-        exe.execute_host({"x": 2})
-        assert exe._auto_pool is auto               # ...and reused per call
-    assert exe._auto_pool is None                   # context exit closed it
+    with repro.Runtime(n_workers=2) as rt:
+        with rt.compile(g, backend="host", host_mode="static",
+                        n_executors=2, team_size=1) as exe:
+            assert not hasattr(exe, "_auto_pool")   # private pools are gone
+            assert exe.execute_host({"x": 1}).outputs == g.execute({"x": 1})
+            exe.execute_host({"x": 2})
+            # every run leased the runtime's executors and gave them back
+            assert exe.runtime is rt
+            assert rt.leased_executors == 0
+            assert len(rt.pool._threads) == rt.n_workers
 
 
 def test_calibrate_freezes_measured_costs_into_plans():
@@ -274,7 +275,6 @@ def test_two_static_plans_interleave_on_one_pool():
 
 def test_serve_engine_static_decode_matches_dynamic():
     import jax
-    import jax.numpy as jnp
     from repro.configs.base import get_config
     from repro.models import transformer
     from repro.serve.engine import ContinuousEngine, Request, ServeConfig
