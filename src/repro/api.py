@@ -640,6 +640,7 @@ def serve_engine(
     serve_cfg: Any = None,
     *,
     continuous: bool = True,
+    paged: Any = False,
     **kw: Any,
 ) -> Any:
     """Serve-shaped entry point: a serving engine over ``repro.compile``.
@@ -649,15 +650,22 @@ def serve_engine(
     captured as graphi Executables, a profiler-chosen executor config, and
     per-request slot admission.  ``continuous=False`` returns the
     length-bucketed wave :class:`~repro.serve.engine.ServeEngine`.
-    Extra kwargs go to the engine constructor — ``rng_seed=`` for either
+    ``paged=True`` (or a :class:`~repro.serve.paged.PagedConfig`) returns
+    the :class:`~repro.serve.paged.PagedEngine` instead — block-paged KV
+    with prefix sharing and chunked prefill (attention-only archs).
+    Extra kwargs go to the engine constructor — ``rng_seed=`` for any
     engine; ``hw=``, ``max_executors=``, ``pool=``, ``runtime=`` (the
     :class:`~repro.runtime.Runtime` whose executors the engine leases per
     step; defaults to the process-wide one), and ``decode_host_mode=``
     ("static" default: the fixed decode graph runs a compiled host plan)
-    are continuous-only.
+    are continuous/paged-only.
     """
     from repro.serve.engine import ContinuousEngine, ServeConfig, ServeEngine
+    from repro.serve.paged import PagedConfig, PagedEngine
 
     scfg = serve_cfg if serve_cfg is not None else ServeConfig()
+    if paged:
+        pcfg = paged if isinstance(paged, PagedConfig) else None
+        return PagedEngine(cfg, params, scfg, paged=pcfg, **kw)
     eng_cls = ContinuousEngine if continuous else ServeEngine
     return eng_cls(cfg, params, scfg, **kw)

@@ -129,6 +129,13 @@ def _eqn_flops(eqn: Any) -> float:
     sub, _ = _sub_jaxpr(eqn)
     if sub is not None:
         return sum(_eqn_flops(e) for e in sub.eqns)
+    if prim.startswith("scatter"):
+        # scatter passes the whole operand through and touches only the
+        # updates: price it by the update size, not the output buffer —
+        # a paged-KV decode graph writes one token row into a pool whose
+        # aval is thousands of times larger than the work done
+        upd = eqn.invars[-1].aval if len(eqn.invars) >= 3 else eqn.outvars[0].aval
+        return _aval_size(upd)
     kind = _kind_of(prim)
     if kind == "movement":
         return 0.0

@@ -1,3 +1,3 @@
-from .ops import decode_attention
+from .ops import decode_attention, paged_decode_attention
 
-__all__ = ["decode_attention"]
+__all__ = ["decode_attention", "paged_decode_attention"]

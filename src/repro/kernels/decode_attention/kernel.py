@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["decode_attention_kernel_call"]
+__all__ = ["decode_attention_kernel_call", "paged_decode_attention_kernel_call"]
 
 _NEG_INF = -1e30
 
@@ -120,3 +120,117 @@ def decode_attention_kernel_call(
         ],
         interpret=interpret,
     )(q, k_cache, v_cache, kv_pos, q_pos.reshape(1))
+
+
+# ---------------------------------------------------------------------------
+# paged variant: the KV lives in a global page pool [P, ps, Hkv, hd] and each
+# batch row owns a page *table*.  The table is a scalar-prefetch operand
+# (PrefetchScalarGridSpec), so the BlockSpec index map itself chases the
+# table: grid step (b, ip) DMAs physical page table[b, ip] — the kernel
+# never materializes a gathered [B, S] cache, it streams exactly the pages
+# the row owns.  Unmapped entries (table[b, ip] < 0) clamp to page 0 for the
+# DMA and are masked out of the online softmax in the body.
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(
+    table_ref, qpos_ref,                 # scalar-prefetch: [B, n_pt], [B]
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, n_pt: int, ps: int, G: int, window: int | None, scale: float,
+):
+    b = pl.program_id(0)
+    ip = pl.program_id(1)
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale     # [Hq, hd]
+    k = k_ref[0]                                 # [ps, Hkv, hd]
+    v = v_ref[0]
+    page = table_ref[b, ip]
+    q_pos = qpos_ref[b]
+    kv_pos = ip * ps + jax.lax.broadcasted_iota(jnp.int32, (ps,), 0)
+
+    Hq, hd = q.shape
+    _, Hkv, _ = k.shape
+    qg = q.reshape(Hkv, G, hd)
+    s = jax.lax.dot_general(
+        qg, k.astype(jnp.float32),
+        (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32,
+    )                                            # [Hkv, G, ps]
+    keep = (page >= 0) & (kv_pos <= q_pos)
+    if window is not None:
+        keep &= kv_pos > q_pos - window
+    s = jnp.where(keep[None, None, :], s, _NEG_INF)
+
+    sm = s.reshape(Hq, ps)
+    m_prev = m_ref[:, :1]
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.maximum(m_prev, sm.max(axis=-1, keepdims=True))
+    p = jnp.exp(sm - m_cur)
+    corr = jnp.exp(m_prev - m_cur)
+    l_cur = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.reshape(Hkv, G, ps), v.astype(jnp.float32),
+        (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] = acc_ref[...] * corr + pv.reshape(Hq, hd)
+    m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_cur, l_ref.shape)
+
+    @pl.when(ip == n_pt - 1)
+    def _done():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel_call(
+    q: jax.Array,           # [B, Hq, hd]
+    k_pages: jax.Array,     # [P, ps, Hkv, hd]
+    v_pages: jax.Array,
+    page_table: jax.Array,  # [B, n_pt] int32, -1 = unmapped
+    q_pos: jax.Array,       # [B] int32
+    *,
+    window: int | None,
+    interpret: bool,
+) -> jax.Array:
+    B, Hq, hd = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    n_pt = page_table.shape[1]
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+
+    kern = functools.partial(
+        _paged_kernel, n_pt=n_pt, ps=ps, G=G, window=window, scale=hd ** -0.5,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n_pt),
+        in_specs=[
+            pl.BlockSpec((1, Hq, hd), lambda b, ip, tbl, qp: (b, 0, 0)),
+            pl.BlockSpec(
+                (1, ps, Hkv, hd),
+                lambda b, ip, tbl, qp: (jnp.maximum(tbl[b, ip], 0), 0, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, ps, Hkv, hd),
+                lambda b, ip, tbl, qp: (jnp.maximum(tbl[b, ip], 0), 0, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, hd), lambda b, ip, tbl, qp: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hq, hd), jnp.float32),
+            pltpu.VMEM((Hq, 128), jnp.float32),
+            pltpu.VMEM((Hq, 128), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), q.dtype),
+        interpret=interpret,
+    )(page_table, q_pos, q, k_pages, v_pages)

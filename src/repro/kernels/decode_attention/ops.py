@@ -9,7 +9,9 @@ import jax.numpy as jnp
 from repro.kernels import default_interpret
 from .kernel import decode_attention_kernel_call
 
-__all__ = ["decode_attention"]
+__all__ = ["decode_attention", "paged_decode_attention"]
+
+_NEG_INF = -1e30
 
 
 @partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
@@ -34,4 +36,75 @@ def decode_attention(
         kv_pos.astype(jnp.int32), q_pos.astype(jnp.int32),
         window=window, block_k=block_k, interpret=interpret,
     )
+    return out[:, None] if squeeze else out
+
+
+@partial(jax.jit, static_argnames=("window", "use_kernel", "interpret"))
+def paged_decode_attention(
+    q: jax.Array,           # [B, 1, Hq, hd] (model layout) or [B, Hq, hd]
+    k_pages: jax.Array,     # [P, ps, Hkv, hd] global page pool
+    v_pages: jax.Array,
+    page_table: jax.Array,  # [B, n_pt] physical page ids, -1 = unmapped
+    q_pos: jax.Array,       # [B] absolute position per row
+    *,
+    window: int | None = None,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Gather-by-page-table decode attention (the paged-KV hot path).
+
+    Logical position of page-table entry ``(j, t)`` is ``j*ps + t``, so a
+    request's pages reconstruct its linear KV cache without the cache ever
+    existing contiguously.  Two paths:
+
+    - the pure-jnp gather path (default off-TPU) — this is what the serving
+      decode graph captures: an explicit ``pages[table]`` gather plus the
+      same position-table-masked softmax as :func:`decode_attention`, so
+      graphi fuses the gather into the attention group and ``StaticHostPlan``
+      replay sees a fixed-shape movement op;
+    - the Pallas kernel (``REPRO_USE_PALLAS=1`` or real TPU), whose
+      scalar-prefetch BlockSpec index map chases the page table directly.
+    """
+    from repro.kernels import kernels_enabled
+
+    from .kernel import paged_decode_attention_kernel_call
+
+    if use_kernel is None:
+        use_kernel = kernels_enabled()
+    if interpret is None:
+        interpret = default_interpret()
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    page_table = page_table.astype(jnp.int32)
+    q_pos = q_pos.astype(jnp.int32)
+    if use_kernel:
+        out = paged_decode_attention_kernel_call(
+            q, k_pages, v_pages, page_table, q_pos,
+            window=window, interpret=interpret,
+        )
+        return out[:, None] if squeeze else out
+
+    B, Hq, hd = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    n_pt = page_table.shape[1]
+    clamped = jnp.maximum(page_table, 0)
+    kc = k_pages[clamped].reshape(B, n_pt * ps, Hkv, hd)
+    vc = v_pages[clamped].reshape(B, n_pt * ps, Hkv, hd)
+    idx = jnp.arange(n_pt * ps)
+    mapped = jnp.repeat(page_table >= 0, ps, axis=1)
+    kv_pos = jnp.where(mapped, idx[None], -1)
+    # masked softmax identical (op for op) to layers.decode_attention's 2-D
+    # path: the paged engine must stay bit-exact with the per-slot engine
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd) * hd ** -0.5
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, kc).astype(jnp.float32)
+    qp = q_pos[:, None]
+    keep = (kv_pos >= 0) & (kv_pos <= qp)
+    if window is not None:
+        keep &= kv_pos > qp - window
+    s = jnp.where(keep[:, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(vc.dtype), vc)
+    out = out.reshape(B, Hq, hd).astype(q.dtype)
     return out[:, None] if squeeze else out

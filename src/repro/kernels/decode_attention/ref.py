@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["decode_attention_ref"]
+__all__ = ["decode_attention_ref", "paged_decode_attention_ref"]
 
 _NEG_INF = -1e30
 
@@ -29,4 +29,38 @@ def decode_attention_ref(
     s = jnp.where(keep[None, None, None, :], s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, hd).astype(q.dtype)
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,           # [B, Hq, hd]
+    k_pages: jax.Array,     # [P, ps, Hkv, hd] global page pool
+    v_pages: jax.Array,
+    page_table: jax.Array,  # [B, n_pt] physical page per logical page, -1 = unmapped
+    q_pos: jax.Array,       # [B] absolute position of each query token
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Oracle for gather-by-page-table decode attention.
+
+    Logical KV position of page-table entry ``(j, t)`` is ``j*ps + t``;
+    entries of unmapped pages (and positions beyond ``q_pos``) are masked.
+    """
+    B, Hq, hd = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    n_pt = page_table.shape[1]
+    kc = k_pages[jnp.maximum(page_table, 0)].reshape(B, n_pt * ps, Hkv, hd)
+    vc = v_pages[jnp.maximum(page_table, 0)].reshape(B, n_pt * ps, Hkv, hd)
+    idx = jnp.arange(n_pt * ps)
+    mapped = jnp.repeat(page_table >= 0, ps, axis=1)
+    kv_pos = jnp.where(mapped, idx[None], -1)             # [B, n_pt*ps]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, kc.astype(jnp.float32))
+    keep = (kv_pos >= 0) & (kv_pos <= q_pos[:, None])
+    if window is not None:
+        keep &= kv_pos > q_pos[:, None] - window
+    s = jnp.where(keep[:, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vc.astype(jnp.float32))
     return out.reshape(B, Hq, hd).astype(q.dtype)

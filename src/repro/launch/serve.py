@@ -21,6 +21,7 @@ import numpy as np
 from repro.configs.base import get_config
 from repro.models import transformer
 from repro.serve.engine import ContinuousEngine, Request, ServeConfig, ServeEngine
+from repro.serve.paged import PagedConfig, PagedEngine
 
 
 def build_requests(cfg, *, n_requests, prompt_lens, max_new,
@@ -94,6 +95,17 @@ def main() -> int:
     p.add_argument("--smoke", action="store_true")
     p.add_argument("--continuous", action="store_true",
                    help="continuous batching on the graphi runtime")
+    p.add_argument("--paged", action="store_true",
+                   help="block-paged KV cache with prefix sharing and "
+                        "chunked prefill (implies continuous batching)")
+    p.add_argument("--page-size", type=int, default=16,
+                   help="tokens per physical KV page (--paged)")
+    p.add_argument("--n-pages", type=int, default=None,
+                   help="physical pages in the pool (--paged; default "
+                        "max_batch * ceil(max_len/page_size))")
+    p.add_argument("--prefill-chunk", type=int, default=64,
+                   help="tokens prefilled per engine step per prompt "
+                        "(--paged; rounded up to a page multiple)")
     p.add_argument("--arrival-rate", type=float, default=0.0,
                    help="Poisson arrival rate (req/s); 0 = all at once")
     def _positive(v):
@@ -130,33 +142,50 @@ def main() -> int:
         max_len=max(prompt_lens) + args.max_new + 1,
         temperature=args.temperature,
     )
-    if args.continuous:
+    continuous = args.continuous or args.paged
+    if continuous:
         # one process-wide Runtime: the engine leases its calibrated
         # executor width from it per step instead of owning a pool
         import repro
         runtime = repro.Runtime(args.runtime_workers,
                                 calibration_path=args.calibration_store)
         repro.set_default_runtime(runtime)
-        engine = ContinuousEngine(cfg, params, scfg, max_executors=args.max_executors,
-                                  runtime=runtime,
-                                  decode_host_mode=args.decode_host_mode)
-        print(f"continuous engine: {engine.n_executors} executors leased of "
-              f"{runtime.n_workers} (profiled best {engine.profile.best_config}), "
-              f"{engine.capacity} slots, decode={engine.decode_host_mode}")
+        if args.paged:
+            pcfg = PagedConfig(page_size=args.page_size, n_pages=args.n_pages,
+                               prefill_chunk=args.prefill_chunk)
+            engine = PagedEngine(cfg, params, scfg, paged=pcfg,
+                                 max_executors=args.max_executors,
+                                 runtime=runtime,
+                                 decode_host_mode=args.decode_host_mode)
+            print(f"paged engine: {engine.n_executors} executors leased of "
+                  f"{runtime.n_workers}, {engine.capacity} slots, "
+                  f"{engine.page_pool.n_pages} pages x {pcfg.page_size} tok, "
+                  f"chunk={engine.chunk}, decode={engine.decode_host_mode}")
+        else:
+            engine = ContinuousEngine(cfg, params, scfg,
+                                      max_executors=args.max_executors,
+                                      runtime=runtime,
+                                      decode_host_mode=args.decode_host_mode)
+            print(f"continuous engine: {engine.n_executors} executors leased of "
+                  f"{runtime.n_workers} (profiled best {engine.profile.best_config}), "
+                  f"{engine.capacity} slots, decode={engine.decode_host_mode}")
     else:
         engine = ServeEngine(cfg, params, scfg)
 
     arrivals = build_requests(cfg, n_requests=args.requests, prompt_lens=prompt_lens,
                               max_new=args.max_new, arrival_rate=args.arrival_rate)
-    done, lat, wall = drive(engine, arrivals, continuous=args.continuous)
+    done, lat, wall = drive(engine, arrivals, continuous=continuous)
     n_tokens = sum(len(r.output) for r in done)
     p50 = percentile(lat.values(), 0.50)
     p95 = percentile(lat.values(), 0.95)
-    mode = "continuous" if args.continuous else "wave"
+    mode = "paged" if args.paged else ("continuous" if continuous else "wave")
     print(f"[{mode}] served {len(done)} requests, {n_tokens} tokens in {wall:.2f}s "
           f"({n_tokens / wall:.1f} tok/s incl. prefill+compile); "
           f"latency p50={p50 * 1e3:.0f}ms p95={p95 * 1e3:.0f}ms")
-    if args.continuous:
+    if args.paged:
+        print("  " + " ".join(f"{k}={v}" for k, v in engine.stats().items()))
+        engine.close()
+    elif continuous:
         print(f"  steps={engine.n_steps} decode_steps={engine.n_decode_steps} "
               f"overlapped_prefills={engine.n_overlapped_prefills}")
         engine.close()

@@ -19,6 +19,7 @@ __all__ = [
     "glu_ffn",
     "chunked_attention",
     "decode_attention",
+    "masked_attention",
     "causal_conv1d",
     "linear_recurrence_chunked",
 ]
@@ -211,6 +212,40 @@ def decode_attention(
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache)
     return out.reshape(B, 1, Hq, hd).astype(q.dtype)
+
+
+def masked_attention(
+    q: jax.Array,        # [B, Sq, Hq, hd]
+    k: jax.Array,        # [B, Skv, Hkv, hd]
+    v: jax.Array,
+    kv_pos: jax.Array,   # [Skv] | [B, Skv] absolute position per entry; -1 = empty
+    q_pos: jax.Array,    # [Sq]  | [B, Sq] absolute position per query row
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Position-table-masked GQA attention for ``Sq >= 1`` query rows.
+
+    The multi-token generalization of :func:`decode_attention` (identical
+    masking semantics and softmax math): every (query, entry) pair is kept
+    iff the entry is occupied, causally visible, and inside the sliding
+    window.  Used by the paged chunked-prefill path, where a prompt chunk
+    attends to gathered context pages (arbitrary position tables) plus its
+    own freshly-computed K/V.
+    """
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd) * hd ** -0.5
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, k).astype(jnp.float32)
+    kvp = kv_pos if kv_pos.ndim == 2 else kv_pos[None]    # [B|1, Skv]
+    qp = q_pos if q_pos.ndim == 2 else q_pos[None]        # [B|1, Sq]
+    keep = (kvp[:, None, :] >= 0) & (kvp[:, None, :] <= qp[:, :, None])
+    if window is not None:
+        keep &= kvp[:, None, :] > qp[:, :, None] - window
+    s = jnp.where(keep[:, None, None, :, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)
 
 
 def causal_conv1d(x: jax.Array, w: jax.Array, cache: jax.Array | None = None):

@@ -23,6 +23,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import mesh_context, shard
 from .griffin import init_rglru_cache, init_rglru_params, rglru_block, rglru_decode_step
@@ -31,6 +33,7 @@ from .layers import (
     chunked_attention,
     decode_attention,
     glu_ffn,
+    masked_attention,
     rms_norm,
     sinusoidal_positions,
 )
@@ -45,6 +48,14 @@ __all__ = [
     "decode_step",
     "cache_insert_slot",
     "cache_evict_slot",
+    "paged_supported",
+    "init_paged_cache",
+    "alloc_page",
+    "free_pages",
+    "paged_decode_step",
+    "paged_prefill_chunk",
+    "paged_insert_chunk",
+    "paged_copy_page",
 ]
 
 
@@ -498,8 +509,20 @@ def _block_decode(cfg: ModelConfig, lp, kind: str, x, lc, *, q_pos, enc=None):
 
 
 def prefill(cfg: ModelConfig, params, batch: dict, cache: dict):
-    """Run the full prompt, fill the cache, return last-position logits."""
+    """Run the full prompt, fill the cache, return last-position logits.
+
+    ``batch["valid_len"]`` (optional scalar int32) marks the prompt as
+    right-padded: only the first ``valid_len`` tokens are real.  Logits come
+    from position ``valid_len - 1``, the cache length is ``valid_len``, and
+    position-table entries past it are cleared to -1 so later decode steps
+    mask the padded K/V out.  This is what lets the serving engines bucket
+    prompt lengths to a handful of compiled shapes (attention-only archs:
+    recurrent state and MoE capacity routing would absorb the pad tokens).
+    """
     tokens = batch["tokens"]
+    valid_len = batch.get("valid_len")
+    if valid_len is not None and any(k != "attn" for k in cfg.layer_kinds()):
+        raise ValueError("valid_len-masked prefill requires attention-only archs")
     x = _embed(cfg, params, tokens)
     enc = None
     if cfg.frontend == "vision" and "image_embeds" in batch:
@@ -561,11 +584,29 @@ def prefill(cfg: ModelConfig, params, batch: dict, cache: dict):
             x, lc = run_block(x, lp, lc, kind)
             new_layers.append(lc)
 
+    if valid_len is not None:
+        valid_len = jnp.asarray(valid_len, jnp.int32)
+
+        def mask_tbl(lc):
+            if isinstance(lc, dict) and "pos" in lc:
+                lc = dict(lc)
+                lc["pos"] = jnp.where(lc["pos"] < valid_len, lc["pos"], -1)
+            return lc
+
+        new_layers = ([mask_tbl(lc) for lc in new_layers]
+                      if isinstance(new_layers, list) else mask_tbl(new_layers))
+
     cache = dict(cache)
     cache["layers"] = new_layers
     # scalar for the shared-position layout, [B] for per-slot caches
-    cache["len"] = jnp.full_like(cache["len"], S)
-    x = rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    if valid_len is None:
+        cache["len"] = jnp.full_like(cache["len"], S)
+        x_last = x[:, -1]
+    else:
+        cache["len"] = jnp.broadcast_to(valid_len, cache["len"].shape)
+        x_last = jax.lax.dynamic_index_in_dim(x, valid_len - 1, axis=1,
+                                              keepdims=False)
+    x = rms_norm(x_last, params["final_norm"], cfg.norm_eps)
     return _logits(cfg, params, x), cache
 
 
@@ -634,3 +675,262 @@ def decode_step(cfg: ModelConfig, params, tokens, cache: dict):
     cache["len"] = cache["len"] + 1
     x = rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
     return _logits(cfg, params, x), cache
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache: global page pool + per-request page tables
+# ---------------------------------------------------------------------------
+#
+# Layout: per layer a page pool {"k": [P, ps, Hkv, hd], "v": ...} (leading
+# layer axis when the arch scans stacked layers), a page table [B, n_pt]
+# mapping each slot's logical page j to a physical page id (-1 = unmapped),
+# and per-slot lengths [B].  The logical KV position of table entry (j, t)
+# is j*ps + t, so a request's pages reconstruct its linear cache without it
+# ever existing contiguously — one short request pins ceil(len/ps) pages
+# instead of a full max_len slot, and requests sharing a prompt prefix can
+# map the *same* physical pages (serve/paged.py owns refcounts + CoW).
+#
+# The page table and lengths are host-managed (numpy in the serving engine,
+# passed in as int32 arrays per step); only the pools are threaded through
+# the captured decode graph functionally.
+
+def paged_supported(cfg: ModelConfig) -> bool:
+    """Paged serving covers decoder-only, attention-only, rope archs: SSM /
+    RG-LRU carry recurrent state that has no paged analogue, and encoder
+    frontends are not served continuously in the first place."""
+    return (not cfg.frontend and not cfg.n_encoder_layers
+            and cfg.rope_theta > 0
+            and all(k == "attn" for k in cfg.layer_kinds()))
+
+
+def _paged_stacked(cfg: ModelConfig) -> bool:
+    return cfg.scan_layers and cfg.is_homogeneous
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                     n_pages: int, page_size: int) -> dict:
+    """Paged KV cache for ``batch`` request slots over a ``n_pages``-page
+    global pool.  ``table``/``len`` come back as numpy (host-managed by the
+    allocator); ``pages`` are device arrays threaded through decode."""
+    if not paged_supported(cfg):
+        raise ValueError("paged KV cache requires a decoder-only "
+                         "attention-only rope arch "
+                         f"(got kinds={cfg.layer_kinds()}, frontend={cfg.frontend!r})")
+    n_pt = -(-max_len // page_size)
+    hd = cfg.resolved_head_dim
+    dtype = cfg.dtype
+
+    def pool():
+        return {"k": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, hd), dtype),
+                "v": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, hd), dtype)}
+
+    if _paged_stacked(cfg):
+        per = [pool() for _ in range(cfg.n_layers)]
+        pages = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    else:
+        pages = [pool() for _ in range(cfg.n_layers)]
+    return {
+        "len": np.zeros((batch,), np.int32),
+        "table": np.full((batch, n_pt), -1, np.int32),
+        "pages": pages,
+    }
+
+
+def alloc_page(cache: dict, slot: int, logical_idx: int, page: int) -> dict:
+    """Map physical ``page`` at logical index ``logical_idx`` of ``slot``'s
+    page table (host-side bookkeeping; the pool allocator picks ``page``)."""
+    table = np.asarray(cache["table"]).copy()
+    if table[slot, logical_idx] >= 0:
+        raise ValueError(f"slot {slot} logical page {logical_idx} already "
+                         f"mapped to {table[slot, logical_idx]}")
+    table[slot, logical_idx] = page
+    return {**cache, "table": table}
+
+
+def free_pages(cache: dict, slot: int) -> tuple[dict, list[int]]:
+    """Unmap every page of ``slot`` and reset its length.  Returns the new
+    cache and the freed physical page ids (the allocator decides whether
+    they return to the free list or stay as cold prefix cache)."""
+    table = np.asarray(cache["table"]).copy()
+    freed = [int(p) for p in table[slot] if p >= 0]
+    table[slot] = -1
+    length = np.asarray(cache["len"]).copy()
+    length[slot] = 0
+    return {**cache, "table": table, "len": length}, freed
+
+
+def _paged_block_decode(cfg: ModelConfig, lp, x, pk, pv, table, q_pos, *,
+                        page_size: int):
+    """Single-token block step over the page pool.  x: [B,1,D];
+    pk/pv: [P, ps, Hkv, hd]; table: [B, n_pt]; q_pos: [B]."""
+    from repro.kernels.decode_attention import paged_decode_attention
+
+    ap = lp["attn"]
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", h, ap["wq"]).reshape(B, 1, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,de->bse", h, ap["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,de->bse", h, ap["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    pos_arr = q_pos[:, None]
+    q = apply_rope(q, pos_arr, cfg.rope_theta)
+    k = apply_rope(k, pos_arr, cfg.rope_theta)
+    P, ps = pk.shape[0], page_size
+    # write this token's K/V at (table[b, len//ps], len%ps); rows whose tail
+    # page is unmapped (idle slots) redirect to the out-of-bounds page P and
+    # the scatter drops them — never a wrapped write into page P-1
+    phys = jnp.take_along_axis(table, (q_pos // ps)[:, None], axis=1)[:, 0]
+    phys = jnp.where(phys < 0, P, phys)
+    off = q_pos % ps
+    pk = pk.at[phys, off].set(k[:, 0], mode="drop")
+    pv = pv.at[phys, off].set(v[:, 0], mode="drop")
+    out = paged_decode_attention(q, pk, pv, table, q_pos,
+                                 window=_window_for(cfg, "attn"))
+    mix = jnp.einsum("bse,ed->bsd", out.reshape(B, 1, -1), ap["wo"])
+    if cfg.parallel_block:
+        mlp_out, _ = _mlp_apply(cfg, lp["mlp"], h)
+        return x + mix + mlp_out, pk, pv
+    x = x + mix
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    mlp_out, _ = _mlp_apply(cfg, lp["mlp"], h2)
+    return x + mlp_out, pk, pv
+
+
+def paged_decode_step(cfg: ModelConfig, params, tokens, cache: dict, *,
+                      page_size: int):
+    """One decode step over the paged cache.  tokens: [B, 1].
+    Returns (logits [B, Vp], new cache with updated pools and len+1)."""
+    q_pos = jnp.asarray(cache["len"], jnp.int32)
+    table = jnp.asarray(cache["table"], jnp.int32)
+    x = _embed(cfg, params, tokens, pos_offset=q_pos)
+
+    if _paged_stacked(cfg):
+        def body(x, inp):
+            lp, pg = inp
+            x, pk, pv = _paged_block_decode(cfg, lp, x, pg["k"], pg["v"],
+                                            table, q_pos, page_size=page_size)
+            return x, {"k": pk, "v": pv}
+
+        x, new_pages = jax.lax.scan(body, x, (params["layers"], cache["pages"]))
+    else:
+        new_pages = []
+        for lp, pg in zip(params["layers"], cache["pages"]):
+            x, pk, pv = _paged_block_decode(cfg, lp, x, pg["k"], pg["v"],
+                                            table, q_pos, page_size=page_size)
+            new_pages.append({"k": pk, "v": pv})
+
+    cache = dict(cache)
+    cache["pages"] = new_pages
+    cache["len"] = q_pos + 1
+    x = rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    return _logits(cfg, params, x), cache
+
+
+def paged_prefill_chunk(cfg: ModelConfig, params, tokens, pages, table_row,
+                        start, valid_len, *, page_size: int):
+    """One page-aligned prompt chunk for a single request (chunked prefill).
+
+    tokens: [1, T] (right-padded; first ``valid_len`` real), table_row:
+    [n_pt] — the request's page-table row, ``start`` — the absolute position
+    of tokens[0].  Reads already-computed context K/V from the pools
+    (entries at positions < start; the mask is *strict* so stale data in the
+    partially-filled tail page never leaks in), computes the chunk's K/V and
+    returns it **without writing**: the engine scatters it into the pools
+    afterwards (paged_insert_chunk), which keeps this graph free of pool
+    writes and lets it run concurrently with the decode step's.
+
+    Returns (logits [1, Vp] at position start+valid_len-1,
+    k_chunk, v_chunk — [L, T, Hkv, hd] stacked or per-layer lists).
+    """
+    T = tokens.shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    valid_len = jnp.asarray(valid_len, jnp.int32)
+    table_row = jnp.asarray(table_row, jnp.int32)
+    pos = start + jnp.arange(T, dtype=jnp.int32)          # [T]
+    x = _embed(cfg, params, tokens)                        # rope: positionless
+    hd = cfg.resolved_head_dim
+    window = _window_for(cfg, "attn")
+
+    def run_block(x, lp, pg):
+        ap = lp["attn"]
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,de->bse", h, ap["wq"]).reshape(1, T, cfg.n_heads, hd)
+        k = jnp.einsum("bsd,de->bse", h, ap["wk"]).reshape(1, T, cfg.n_kv_heads, hd)
+        v = jnp.einsum("bsd,de->bse", h, ap["wv"]).reshape(1, T, cfg.n_kv_heads, hd)
+        q = apply_rope(q, pos[None], cfg.rope_theta)
+        k = apply_rope(k, pos[None], cfg.rope_theta)
+        pk, pv = pg["k"], pg["v"]
+        n_pt = table_row.shape[0]
+        ps = page_size
+        ctx_k = pk[jnp.maximum(table_row, 0)].reshape(1, n_pt * ps, *pk.shape[2:])
+        ctx_v = pv[jnp.maximum(table_row, 0)].reshape(1, n_pt * ps, *pv.shape[2:])
+        idx = jnp.arange(n_pt * ps, dtype=jnp.int32)
+        mapped = jnp.repeat(table_row >= 0, ps)
+        ctx_pos = jnp.where(mapped & (idx < start), idx, -1)
+        k_all = jnp.concatenate([ctx_k, k], axis=1)
+        v_all = jnp.concatenate([ctx_v, v], axis=1)
+        kv_pos = jnp.concatenate([ctx_pos, pos])
+        out = masked_attention(q, k_all, v_all, kv_pos, pos, window=window)
+        mix = jnp.einsum("bse,ed->bsd", out.reshape(1, T, -1), ap["wo"])
+        if cfg.parallel_block:
+            mlp_out, _ = _mlp_apply(cfg, lp["mlp"], h)
+            return x + mix + mlp_out, (k[0], v[0])
+        x = x + mix
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        mlp_out, _ = _mlp_apply(cfg, lp["mlp"], h2)
+        return x + mlp_out, (k[0], v[0])
+
+    if _paged_stacked(cfg):
+        def body(x, inp):
+            lp, pg = inp
+            x, kv = run_block(x, lp, pg)
+            return x, kv
+
+        x, (k_chunk, v_chunk) = jax.lax.scan(body, x, (params["layers"], pages))
+    else:
+        k_chunk, v_chunk = [], []
+        for lp, pg in zip(params["layers"], pages):
+            x, (kc, vc) = run_block(x, lp, pg)
+            k_chunk.append(kc)
+            v_chunk.append(vc)
+
+    x_last = jax.lax.dynamic_index_in_dim(x, valid_len - 1, axis=1, keepdims=False)
+    x_last = rms_norm(x_last, params["final_norm"], cfg.norm_eps)
+    return _logits(cfg, params, x_last), k_chunk, v_chunk
+
+
+def paged_insert_chunk(cfg: ModelConfig, pages, table_row, start, valid_len,
+                       k_chunk, v_chunk, *, page_size: int):
+    """Scatter a prefill chunk's K/V into the pools through the page table.
+    Padded positions (>= valid_len) and unmapped pages redirect out of
+    bounds and are dropped."""
+    table_row = jnp.asarray(table_row, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    valid_len = jnp.asarray(valid_len, jnp.int32)
+    stacked = _paged_stacked(cfg)
+    T = (k_chunk.shape[1] if stacked else k_chunk[0].shape[0])
+    P = (pages["k"].shape[1] if stacked else pages[0]["k"].shape[0])
+    ps = page_size
+    idx = start + jnp.arange(T, dtype=jnp.int32)
+    phys = table_row[idx // ps]
+    off = idx % ps
+    drop = (jnp.arange(T) >= valid_len) | (phys < 0)
+    phys = jnp.where(drop, P, phys)
+
+    def ins(pool, upd):
+        return pool.at[phys, off].set(upd, mode="drop")
+
+    if stacked:
+        return {"k": jax.vmap(ins)(pages["k"], k_chunk),
+                "v": jax.vmap(ins)(pages["v"], v_chunk)}
+    return [{"k": ins(pg["k"], kc), "v": ins(pg["v"], vc)}
+            for pg, kc, vc in zip(pages, k_chunk, v_chunk)]
+
+
+def paged_copy_page(cfg: ModelConfig, pages, src, dst):
+    """Copy physical page ``src`` onto ``dst`` in every layer's pools
+    (copy-on-write: a new request that shares only part of a registered
+    page copies it and overwrites from its first divergent token)."""
+    if _paged_stacked(cfg):
+        return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), pages)
+    return jax.tree.map(lambda a: a.at[dst].set(a[src]), pages)

@@ -1,14 +1,21 @@
-"""Serving: prefill/decode step functions, pad-masked sampling, and the
-continuous-batching + wave engines."""
+"""Serving: prefill/decode step functions, pad-masked sampling, the
+continuous-batching + wave engines, and the paged-KV engine."""
 from .engine import ContinuousEngine, Request, ServeConfig, ServeEngine
-from .step import make_decode_step, make_prefill_step, mask_pad_vocab, sample_tokens
+from .paged import PagedConfig, PagedEngine, PagePool
+from .step import (make_decode_step, make_paged_decode_step, make_prefill_chunk_step,
+                   make_prefill_step, mask_pad_vocab, sample_tokens)
 
 __all__ = [
     "ContinuousEngine",
+    "PagedConfig",
+    "PagedEngine",
+    "PagePool",
     "Request",
     "ServeConfig",
     "ServeEngine",
     "make_decode_step",
+    "make_paged_decode_step",
+    "make_prefill_chunk_step",
     "make_prefill_step",
     "mask_pad_vocab",
     "sample_tokens",

@@ -48,6 +48,23 @@ from repro.serve.step import make_decode_step, make_prefill_step, sample_tokens
 __all__ = ["Request", "ServeConfig", "ServeEngine", "ContinuousEngine"]
 
 
+def _validate_submit(req: "Request", scfg: "ServeConfig") -> None:
+    """Shared submit-time validation (both engines, and the paged engine)."""
+    if len(req.prompt) == 0:
+        raise ValueError(f"request {req.request_id}: empty prompt")
+    if req.max_new_tokens <= 0:
+        raise ValueError(
+            f"request {req.request_id}: max_new_tokens must be positive "
+            f"(got {req.max_new_tokens})"
+        )
+    if len(req.prompt) + req.max_new_tokens > scfg.max_len:
+        raise ValueError(
+            f"request {req.request_id}: prompt ({len(req.prompt)}) + "
+            f"max_new_tokens ({req.max_new_tokens}) exceeds max_len "
+            f"({scfg.max_len})"
+        )
+
+
 @dataclass
 class Request:
     request_id: int
@@ -104,12 +121,7 @@ class ServeEngine(_SamplerMixin):
         self._decode = jax.jit(lambda p, c, t: transformer.decode_step(cfg, p, t, c))
 
     def submit(self, req: Request) -> None:
-        if len(req.prompt) + req.max_new_tokens > self.scfg.max_len:
-            raise ValueError(
-                f"request {req.request_id}: prompt ({len(req.prompt)}) + "
-                f"max_new_tokens ({req.max_new_tokens}) exceeds max_len "
-                f"({self.scfg.max_len})"
-            )
+        _validate_submit(req, self.scfg)
         req._order = self._n_submitted
         self._n_submitted += 1
         self.queue.append(req)
@@ -280,6 +292,17 @@ class ContinuousEngine(_SamplerMixin):
             # must not widen the placement
             self._decode_exe.host_plan(n_exec)
         self._team_size = self.profile.best_team_size
+        # prefill graphs are keyed by *bucket*, not exact prompt length:
+        # prompts are right-padded to the next power of two and masked with a
+        # valid-length (transformer.prefill's valid_len path), so N distinct
+        # lengths compile O(log N) executables instead of N.  Bit-exactness
+        # holds for dense attention-only archs — padded tokens never enter a
+        # real token's causal window and their cache entries are pos-masked —
+        # but MoE capacity routing couples positions, and SSM/RG-LRU carry
+        # state through padding, so those archs keep exact-length graphs.
+        self._bucket_prefill = (
+            not cfg.n_experts and all(k == "attn" for k in cfg.layer_kinds()))
+        self._prefill_cap = transformer._attn_cache_len(cfg, scfg.max_len)
         self._prefill_exes: dict[int, api.Executable] = {}
 
         # slot insert/evict are jitted with a *traced* slot index: one
@@ -333,12 +356,7 @@ class ContinuousEngine(_SamplerMixin):
 
     # -- submission ------------------------------------------------------------
     def submit(self, req: Request) -> None:
-        if len(req.prompt) + req.max_new_tokens > self.scfg.max_len:
-            raise ValueError(
-                f"request {req.request_id}: prompt ({len(req.prompt)}) + "
-                f"max_new_tokens ({req.max_new_tokens}) exceeds max_len "
-                f"({self.scfg.max_len})"
-            )
+        _validate_submit(req, self.scfg)
         req._order = self._n_submitted
         self._n_submitted += 1
         self.pending.append(req)
@@ -378,28 +396,52 @@ class ContinuousEngine(_SamplerMixin):
         )
         return exe.captured.unflatten(res.outputs)
 
+    def _prefill_bucket(self, prompt_len: int) -> int:
+        """Power-of-two length bucket (capped at the cache length); exact
+        length for archs where padding would not be bit-exact, or when the
+        cap falls below the prompt (SWA ring: no room to pad)."""
+        if not self._bucket_prefill:
+            return prompt_len
+        b = 1 << max(0, prompt_len - 1).bit_length()
+        b = min(b, self._prefill_cap)
+        return b if b >= prompt_len else prompt_len
+
+    def _prefill_batch(self, prompt) -> dict:
+        S = len(prompt)
+        bucket = self._prefill_bucket(S)
+        if not self._bucket_prefill:
+            return {"tokens": jnp.asarray(prompt, jnp.int32)[None]}
+        toks = np.full((1, bucket), self.scfg.pad_id, np.int32)
+        toks[0, :S] = prompt
+        return {"tokens": jnp.asarray(toks), "valid_len": jnp.int32(S)}
+
     def _prefill_exe(self, prompt_len: int, pool=None):
-        exe = self._prefill_exes.get(prompt_len)
+        bucket = self._prefill_bucket(prompt_len)
+        exe = self._prefill_exes.get(bucket)
         if exe is None:
             from repro import api
 
-            tok_spec = {"tokens": jax.ShapeDtypeStruct((1, prompt_len), jnp.int32)}
+            tok_spec = {"tokens": jax.ShapeDtypeStruct((1, bucket), jnp.int32)}
+            if self._bucket_prefill:
+                tok_spec["valid_len"] = jax.ShapeDtypeStruct((), jnp.int32)
             exe = api.compile(
                 make_prefill_step(self.cfg), self.params, self._zero_sub_cache, tok_spec,
                 hw=self.hw, backend="host", pool=self.pool, runtime=self.runtime,
                 jit_nodes=True,
                 n_executors=self.n_executors, team_size=self._team_size,
-                name=f"serve_prefill[{self.cfg.name},S={prompt_len}]",
+                name=f"serve_prefill[{self.cfg.name},S={bucket}]",
             )
             # first-call warmup, same reasoning as the decode graph
+            warm_batch = {"tokens": jnp.zeros((1, bucket), jnp.int32)}
+            if self._bucket_prefill:
+                warm_batch["valid_len"] = jnp.int32(bucket)
             out = self._run_exe(
-                exe, (self.params, self._zero_sub_cache,
-                      {"tokens": jnp.zeros((1, prompt_len), jnp.int32)}),
+                exe, (self.params, self._zero_sub_cache, warm_batch),
                 pool=pool)
             sample_tokens(out[0], self.cfg.vocab_size, self.scfg.temperature,
                           jax.random.key(0) if self.scfg.temperature > 0 else None)
             jax.block_until_ready(out[0])
-            self._prefill_exes[prompt_len] = exe
+            self._prefill_exes[bucket] = exe
         return exe
 
     def _admit(self, req: Request, slot: int, pool=None):
@@ -407,7 +449,7 @@ class ContinuousEngine(_SamplerMixin):
         exe = self._prefill_exe(len(req.prompt), pool=pool)
         logits, filled = self._run_exe(
             exe, (self.params, self._zero_sub_cache,
-                  {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}),
+                  self._prefill_batch(req.prompt)),
             pool=pool)
         return req, slot, logits, filled
 

@@ -15,7 +15,14 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import transformer
 
-__all__ = ["make_prefill_step", "make_decode_step", "mask_pad_vocab", "sample_tokens"]
+__all__ = [
+    "make_prefill_step",
+    "make_decode_step",
+    "make_paged_decode_step",
+    "make_prefill_chunk_step",
+    "mask_pad_vocab",
+    "sample_tokens",
+]
 
 
 def make_prefill_step(cfg: ModelConfig) -> Callable:
@@ -31,6 +38,32 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
         return logits, cache
 
     return decode_step
+
+
+def make_paged_decode_step(cfg: ModelConfig, page_size: int) -> Callable:
+    """Batched decode over the block-paged KV cache: each batch row reads and
+    writes physical pages through its page-table row (``cache["table"]``);
+    rows whose tail page is unmapped scatter out of bounds and are dropped."""
+
+    def paged_decode_step(params, cache, tokens):
+        return transformer.paged_decode_step(cfg, params, tokens, cache,
+                                             page_size=page_size)
+
+    return paged_decode_step
+
+
+def make_prefill_chunk_step(cfg: ModelConfig, page_size: int) -> Callable:
+    """One page-aligned prompt chunk of a single request: reads context K/V
+    from the pools (strictly below ``start``), returns the chunk's K/V
+    *without writing* — the engine scatters it in afterwards, so this graph
+    can run concurrently with the decode step's pool writes."""
+
+    def prefill_chunk_step(params, pages, table_row, batch, start, valid_len):
+        return transformer.paged_prefill_chunk(
+            cfg, params, batch["tokens"], pages, table_row, start, valid_len,
+            page_size=page_size)
+
+    return prefill_chunk_step
 
 
 def mask_pad_vocab(logits: jax.Array, vocab_size: int) -> jax.Array:

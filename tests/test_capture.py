@@ -108,6 +108,17 @@ def test_matmul_flops_exact():
     assert gemms[0].meta["rows"] == 8
 
 
+def test_scatter_flops_priced_by_update_size():
+    # a paged-KV decode graph writes one token row into a pool thousands of
+    # times larger; pricing the scatter by its output buffer would dwarf the
+    # real work and skew partitioning
+    pool = jnp.zeros((1024, 64))
+    upd = jnp.ones((64,))
+    cg = capture(lambda p, u: p.at[0].set(u), pool, upd)
+    work = sum(n.flops for n in cg.graph.nodes if n.kind != "input")
+    assert work < pool.size
+
+
 def test_elementwise_chain_fuses_into_consumer():
     def f(x, w):
         return jnp.sum(jnp.tanh(x @ w) * 2.0 + 1.0)

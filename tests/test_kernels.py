@@ -5,8 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decode_attention import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention import decode_attention, paged_decode_attention
+from repro.kernels.decode_attention.ref import (decode_attention_ref,
+                                                paged_decode_attention_ref)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.lstm_cell import lstm_cell_fused
@@ -106,6 +107,70 @@ def test_decode_attention_ring_buffer():
     q_pos = jnp.asarray(48, jnp.int32)
     out = decode_attention(q, kc, vc, kv_pos, q_pos, window=32, block_k=32, interpret=True)
     ref = decode_attention_ref(q, kc, vc, kv_pos, q_pos, window=32)
+    allclose(out, ref, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+def _paged_case(key, B, P, ps, n_pt, Hq, Hkv, hd, lens, dt):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Hq, hd), dt)
+    kp = jax.random.normal(ks[1], (P, ps, Hkv, hd), dt)
+    vp = jax.random.normal(ks[2], (P, ps, Hkv, hd), dt)
+    # each row maps ceil(len/ps) distinct pages, rest unmapped
+    table = np.full((B, n_pt), -1, np.int32)
+    nxt = 0
+    for b, n in enumerate(lens):
+        for j in range(-(-n // ps)):
+            table[b, j] = nxt % P
+            nxt += 1
+    q_pos = jnp.asarray([n - 1 for n in lens], jnp.int32)
+    return q, kp, vp, jnp.asarray(table), q_pos
+
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,P,ps,n_pt,Hq,Hkv,hd,lens,window",
+    [
+        (2, 16, 16, 4, 8, 1, 64, (50, 17), None),   # MQA, mixed fill
+        (1, 8, 32, 3, 4, 2, 32, (70,), 48),         # GQA sliding window
+        (3, 12, 8, 6, 4, 4, 16, (48, 1, 23), None), # MHA, full/empty rows
+    ],
+)
+def test_paged_decode_attention(B, P, ps, n_pt, Hq, Hkv, hd, lens, window, dt):
+    q, kp, vp, table, q_pos = _paged_case(
+        jax.random.key(10), B, P, ps, n_pt, Hq, Hkv, hd, lens, dt)
+    out = paged_decode_attention(q, kp, vp, table, q_pos, window=window,
+                                 use_kernel=True, interpret=True)
+    ref = paged_decode_attention_ref(q, kp, vp, table, q_pos, window=window)
+    allclose(out, ref, dt)
+    # the jnp fallback path must agree too (it is what captured graphs run)
+    jnp_out = paged_decode_attention(q, kp, vp, table, q_pos, window=window,
+                                     use_kernel=False)
+    allclose(jnp_out, ref, dt)
+
+
+def test_paged_matches_linear_decode_attention():
+    """A paged cache laid out contiguously == the linear-cache kernel."""
+    B, S, ps, H, hd = 2, 64, 16, 4, 32
+    ks = jax.random.split(jax.random.key(11), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, H, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, H, hd), jnp.float32)
+    fill = 50
+    kv_pos = jnp.where(jnp.arange(S) < fill, jnp.arange(S), -1)
+    q_pos = jnp.asarray(fill - 1, jnp.int32)
+    ref = decode_attention_ref(q, kc, vc, kv_pos, q_pos)
+    # repack row b's cache as pages b*n_pt + j
+    n_pt = S // ps
+    kp = kc.reshape(B * n_pt, ps, H, hd)
+    vp = vc.reshape(B * n_pt, ps, H, hd)
+    table = jnp.arange(B * n_pt, dtype=jnp.int32).reshape(B, n_pt)
+    out = paged_decode_attention(q, kp, vp, table,
+                                 jnp.full((B,), fill - 1, jnp.int32),
+                                 use_kernel=True, interpret=True)
     allclose(out, ref, jnp.float32)
 
 

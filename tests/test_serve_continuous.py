@@ -14,7 +14,7 @@ from repro.core import KNL7250
 from repro.core.engine import ExecutorPool, HostScheduler
 from repro.core.profiler import enumerate_symmetric_configs, profile
 from repro.models import transformer
-from repro.serve.engine import ContinuousEngine, Request, ServeConfig
+from repro.serve.engine import ContinuousEngine, Request, ServeConfig, ServeEngine
 from repro.serve.step import mask_pad_vocab
 
 
@@ -119,6 +119,48 @@ def test_submit_over_budget_raises(engine):
     with pytest.raises(ValueError, match="exceeds max_len"):
         engine.submit(Request(request_id=0, prompt=np.ones(40, np.int32),
                               max_new_tokens=40))
+
+
+def test_submit_rejects_degenerate_requests(model, engine):
+    cfg, params = model
+    wave = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_len=48))
+    for eng in (engine, wave):
+        with pytest.raises(ValueError, match="empty prompt"):
+            eng.submit(Request(request_id=0, prompt=np.empty(0, np.int32)))
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng.submit(Request(request_id=0, prompt=np.ones(4, np.int32),
+                               max_new_tokens=0))
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng.submit(Request(request_id=0, prompt=np.ones(4, np.int32),
+                               max_new_tokens=-3))
+
+
+# ---------------------------------------------------------------------------
+# prefill bucketing: N prompt lengths compile O(log N) executables
+# ---------------------------------------------------------------------------
+
+def test_prefill_bucketing_bounds_executables(model):
+    """100 distinct prompt lengths must compile at most O(log) prefill
+    graphs (pow2 buckets, right-padded + valid-length-masked), and bucketed
+    prefill must stay bit-identical to unbatched greedy."""
+    cfg, params = model
+    with ContinuousEngine(cfg, params,
+                          ServeConfig(max_batch=2, max_len=128)) as eng:
+        assert eng._bucket_prefill
+        eng.warmup(range(1, 101))
+        assert len(eng._prefill_exes) <= 8, sorted(eng._prefill_exes)
+        # parity at bucket boundaries: exact pow2, pow2 +/- 1, interior
+        rng = np.random.default_rng(5)
+        lens = [1, 3, 8, 9, 33, 64]
+        prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+                   for n in lens]
+        for i, pr in enumerate(prompts):
+            eng.submit(Request(request_id=i, prompt=pr, max_new_tokens=4))
+        done = eng.run()
+        assert len(eng._prefill_exes) <= 8       # no new graphs appeared
+    for r in done:
+        ref = _reference_decode(cfg, params, r.prompt, 4)
+        assert r.output == ref, (len(r.prompt), r.output, ref)
 
 
 def test_rejects_encoder_frontends(model):
