@@ -74,6 +74,44 @@ def bench_micro(repeats: int, n_exec: int) -> dict:
     }
 
 
+def bench_check_overhead(repeats: int, n_exec: int) -> dict:
+    """``check="strict"`` cost: host-plan build time with vs without the
+    structural verifier (repro.checks S-*/P-* rules) on the bench decode
+    graph.  The ISSUE gate: strict adds < 10% to plan-build time."""
+    from repro.checks import check_plan, check_schedule
+
+    g = layered_graph(L=24, W=4)
+
+    def build():
+        sched = make_schedule(g, KNL7250, n_executors=n_exec, team_size=1)
+        return sched, compile_host_plan(g, sched)
+
+    build()                                             # warm caches
+    plain: list[float] = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        build()
+        plain.append(time.perf_counter() - t0)
+    strict: list[float] = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        sched, plan = build()
+        rep = check_schedule(sched, g)
+        rep.extend(check_plan(plan, g))
+        rep.raise_if_errors()
+        strict.append(time.perf_counter() - t0)
+    p, s = statistics.median(plain), statistics.median(strict)
+    return {
+        "bench": "strict_check_overhead",
+        "n_nodes": len(g),
+        "n_executors": n_exec,
+        "repeats": repeats,
+        "plain_build_ms": round(p * 1e3, 3),
+        "strict_build_ms": round(s * 1e3, 3),
+        "overhead_pct": round((s / p - 1.0) * 100.0, 2),
+    }
+
+
 def bench_decode_step(steps: int) -> dict:
     import jax
     import jax.numpy as jnp
@@ -152,7 +190,9 @@ def main() -> int:
     t0 = time.time()
     micro = bench_micro(args.repeats, args.executors)
     step = bench_decode_step(args.steps)
-    payload = {"total_wall_s": round(time.time() - t0, 2), "rows": [micro, step]}
+    strict = bench_check_overhead(args.repeats, args.executors)
+    payload = {"total_wall_s": round(time.time() - t0, 2),
+               "rows": [micro, step, strict]}
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1)
 
@@ -162,6 +202,9 @@ def main() -> int:
     print(f"{step['bench']:18s} dyn={step['dynamic_step_ms']:8.2f}ms/tok "
           f"static={step['static_step_ms']:8.2f}ms/tok "
           f"speedup={step['speedup_x']:.2f}x")
+    print(f"{strict['bench']:18s} plain={strict['plain_build_ms']:8.2f}ms "
+          f"strict={strict['strict_build_ms']:8.2f}ms "
+          f"overhead={strict['overhead_pct']:+.1f}%")
     print(f"wrote {args.out} ({payload['total_wall_s']}s)")
 
     # ISSUE gates: static must cut per-op scheduling overhead >= 1.5x on the
@@ -175,6 +218,10 @@ def main() -> int:
     gate(step["static_step_ms"] <= 1.1 * step["dynamic_step_ms"],
          f"static decode step {step['static_step_ms']}ms regressed vs dynamic "
          f"{step['dynamic_step_ms']}ms (> 10%)")
+    gate(strict["strict_build_ms"] <= 1.1 * strict["plain_build_ms"],
+         f"check=strict plan build {strict['strict_build_ms']}ms is "
+         f"{strict['overhead_pct']}% over plain {strict['plain_build_ms']}ms "
+         "(gate: < 10%)")
     return 0
 
 

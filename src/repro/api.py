@@ -61,6 +61,7 @@ def _cost_fp(costs: Mapping[str, float] | None) -> int | None:
 
 _BACKENDS = ("host", "sim", "mesh")
 _HOST_MODES = ("dynamic", "static")
+_CHECK_MODES = ("off", "basic", "strict")
 
 
 class Executable:
@@ -88,12 +89,24 @@ class Executable:
         host_mode: str = "dynamic",
         runtime: Runtime | None = None,
         signature: str | None = None,
+        check: str = "basic",
     ):
         if backend not in _BACKENDS:
             raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
         if host_mode not in _HOST_MODES:
             raise ValueError(
                 f"host_mode must be one of {_HOST_MODES}, got {host_mode!r}")
+        if check not in _CHECK_MODES:
+            raise ValueError(
+                f"check must be one of {_CHECK_MODES}, got {check!r}")
+        if check != "off":
+            # structural graph verification (repro.checks G-* rules): O(V+E),
+            # runs once per executable — a malformed graph fails loudly here,
+            # not as a stuck run or a wrong plan deep in the host runtime
+            from repro.checks import check_graph
+
+            check_graph(graph).raise_if_errors()
+        self.check = check
         self._graph = graph
         self.hw = hw
         self.captured = captured
@@ -281,6 +294,26 @@ class Executable:
             self._plan = plan
         return plan
 
+    def verify(self, *, hazards: bool = True, plan: bool = True):
+        """Run the full static verifier over this executable's artifacts.
+
+        Returns the :class:`repro.checks.Report`: graph structural rules,
+        schedule feasibility, compiled host-plan invariants (``plan=True``
+        builds/fetches the default :meth:`host_plan`), and — with
+        ``hazards=True`` — buffer effect inference plus unordered
+        read/write hazard detection over the captured jaxpr equations.
+        Raises nothing itself; gate on ``report.ok`` or call
+        ``report.raise_if_errors()``.
+        """
+        from repro.checks import verify_all
+
+        return verify_all(
+            self._graph,
+            self.schedule,
+            self.host_plan() if plan else None,
+            hazards=hazards,
+        )
+
     def describe(self) -> str:
         g = self._graph
         sched = self.schedule
@@ -359,7 +392,17 @@ class Executable:
                     self._graph, self.hw, n_executors=n_executors,
                     team_size=sched.team_size, policy=self.policy, costs=costs,
                 )
-            return compile_host_plan(self._graph, sched, n_executors=n_executors)
+            plan = compile_host_plan(self._graph, sched, n_executors=n_executors)
+            if self.check == "strict":
+                # verify every freshly-built plan (repro.checks S-*/P-*
+                # rules); cached fetches stay O(1) — the artifact is frozen,
+                # re-verifying the same plan per step would buy nothing
+                from repro.checks import check_plan, check_schedule
+
+                rep = check_schedule(sched, self._graph)
+                rep.extend(check_plan(plan, self._graph))
+                rep.raise_if_errors()
+            return plan
 
         plan = self._host_plans.get(n_executors)
         if plan is not None:                 # O(1) on the per-step hot path
@@ -552,6 +595,7 @@ def compile(
     pool: ExecutorPool | None = None,
     host_mode: str = "dynamic",
     runtime: Runtime | None = None,
+    check: str = "basic",
 ) -> Executable:
     """Turn a JAX function (or a pre-built :class:`Graph`) into a scheduled
     :class:`Executable`.
@@ -573,6 +617,10 @@ def compile(
     (paper-faithful centralized scheduler) or ``"static"`` (compiled
     :class:`~repro.core.static_host.StaticHostPlan` — per-op scheduling
     overhead amortized to ~zero, the right mode for replayed graphs).
+    ``check`` picks the static-verification level (``repro.checks``):
+    ``"off"`` — none; ``"basic"`` (default) — O(V+E) graph structural rules
+    at compile time; ``"strict"`` — additionally verify every freshly built
+    host plan (schedule feasibility + plan invariants) before it runs.
     """
     captured: CapturedGraph | None = None
     if isinstance(target, CapturedGraph):
@@ -607,6 +655,7 @@ def compile(
         host_mode=host_mode,
         runtime=runtime,
         signature=signature,
+        check=check,
     )
     if runtime is not None:
         costs = runtime.calibration.get(signature)

@@ -275,7 +275,7 @@ def _make_node_fn(members, imports, const_bindings, exports):
 def _leaf_name(i: int, path: Any) -> str:
     raw = jax.tree_util.keystr(path)
     keep = "".join(c for c in raw if c.isalnum() or c in "._")
-    keep = keep.strip("._")
+    keep = keep.strip("._")  # noqa: B005 — char-set strip is the intent
     return f"in.{keep[-48:]}" if keep else f"in.{i}"
 
 
@@ -428,7 +428,17 @@ def capture(fn, *specs: Any, name: str | None = None, fuse: bool = True) -> Capt
         bytes_out = sum(_aval_bytes(v.aval) for v in exports)
 
         meta: dict[str, Any] = {"n_eqns": len(grp_eqns),
-                                "prims": tuple(e.primitive.name for e in grp_eqns)}
+                                "prims": tuple(e.primitive.name for e in grp_eqns),
+                                # effect-inference hooks (repro.checks.effects):
+                                # the group's jaxpr eqns, its import spec
+                                # (var, dep_index, slot, n_slots) and export
+                                # vars in slot order — lets the checker trace
+                                # which *input buffers* a node reads, writes
+                                # (scatter / dynamic_update_slice, incl.
+                                # inside scan/while bodies), or passes through
+                                "_eqns": tuple(grp_eqns),
+                                "_imports": tuple(import_spec),
+                                "_exports": tuple(exports)}
         rows = _gemm_rows(anchor_eqn)
         if rows is not None:
             meta["rows"] = rows

@@ -19,6 +19,7 @@
 from __future__ import annotations
 
 import heapq
+import itertools
 import queue
 import threading
 import time
@@ -56,6 +57,12 @@ class ExecutorPool:
         # the decode loop pays one round-trip per chained node per step
         self._buffers: list[queue.SimpleQueue] = [queue.SimpleQueue() for _ in range(n_executors)]
         self._segment_lock = threading.Lock()
+        self._seg_batches = itertools.count()
+        # (executor, batch_no, segment_name) per segment enqueue, in buffer
+        # order, when enabled: the evidence `repro.checks` replays to verify
+        # batches land FIFO-consistently (no cross-plan deadlock) instead of
+        # assuming the lock above works
+        self.segment_log: list[tuple[int, int, str]] | None = None
         self._closed = False
         self._threads = [
             threading.Thread(target=self._worker, args=(e,), daemon=True,
@@ -94,7 +101,10 @@ class ExecutorPool:
         if self._closed:
             raise RuntimeError("ExecutorPool is closed")
         with self._segment_lock:
+            batch = next(self._seg_batches)
             for ex, name, task in items:
+                if self.segment_log is not None:
+                    self.segment_log.append((ex, batch, name))
                 self._buffers[ex].put((name, task, reply, t_origin))
 
     def qsize(self, ex: int) -> int:
@@ -208,6 +218,7 @@ class HostScheduler:
         self._entry = {n: (-self.levels[n], seq[n], n) for n in names}
         self._ready0 = sorted(self._entry[n] for n in names if self._indeg0[n] == 0)
         self._total = len(graph)
+        self._graph_version = graph.version
 
     def run(
         self,
@@ -216,12 +227,13 @@ class HostScheduler:
         pool: Any = None,
     ) -> HostRunResult:
         g = self.graph
-        if len(g) != self._total:
+        if g.version != self._graph_version:
             # the per-graph immutables above were hoisted to __init__; a
             # node added since would silently never execute
             raise RuntimeError(
-                f"graph {g.name!r} grew from {self._total} to {len(g)} nodes "
-                "after HostScheduler construction — build a new scheduler"
+                f"graph {g.name!r} mutated (version {self._graph_version} -> "
+                f"{g.version}, {self._total} -> {len(g)} nodes) after "
+                "HostScheduler construction — build a new scheduler"
             )
         inputs = dict(inputs or {})
         results: dict[str, Any] = {}

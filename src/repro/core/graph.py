@@ -50,6 +50,8 @@ class Graph:
         self._nodes: dict[str, OpNode] = {}
         self._succs: dict[str, list[str]] = {}
         self._succ_tuples: dict[str, tuple[str, ...]] = {}
+        self._version = 0
+        self._succ_version = 0
 
     # -- construction ------------------------------------------------------
     def add(self, node: OpNode) -> OpNode:
@@ -64,8 +66,20 @@ class Graph:
         self._succs[node.name] = []
         for d in node.deps:
             self._succs[d].append(node.name)
-            self._succ_tuples.pop(d, None)   # invalidate the cached view
+        self._version += 1
         return node
+
+    @property
+    def version(self) -> int:
+        """Mutation counter, bumped on every :meth:`add`.
+
+        The single staleness guard for everything derived from the graph's
+        structure: cached successor tuples, :class:`HostScheduler` hoisted
+        immutables, compiled :class:`StaticHostPlan`\\ s, and
+        ``repro.checks`` analyses all record the version they were built
+        against and refuse (or rebuild) when the graph has grown since.
+        """
+        return self._version
 
     def add_op(self, name: str, **kw: Any) -> OpNode:
         deps = tuple(kw.pop("deps", ()))
@@ -94,8 +108,11 @@ class Graph:
 
         Hit once per op per run by every runtime (dynamic scheduler,
         simulator, plan compiler) — a fresh list copy per call was pure
-        per-op overhead.  The cache invalidates on :meth:`add`.
+        per-op overhead.  The cache invalidates via :attr:`version`.
         """
+        if self._succ_version != self._version:
+            self._succ_tuples.clear()
+            self._succ_version = self._version
         t = self._succ_tuples.get(name)
         if t is None:
             t = self._succ_tuples[name] = tuple(self._succs[name])

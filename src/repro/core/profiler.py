@@ -84,7 +84,8 @@ def profile(
         if best is None or res.makespan < best[0]:
             best = (res.makespan, n_exec, team)
             best_costs = costs
-    assert best is not None
+    if best is None:
+        raise RuntimeError("profile enumerated no executor configurations")
     return ProfileResult(
         best_n_executors=best[1],
         best_team_size=best[2],

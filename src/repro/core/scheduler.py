@@ -11,7 +11,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from .cost_model import HardwareModel
-from .graph import Graph
+from .graph import Graph, GraphValidationError
 from .simulate import SimConfig, SimResult, simulate
 
 __all__ = ["Schedule", "make_schedule", "slot_assignment"]
@@ -46,19 +46,25 @@ class Schedule:
 
     def validate(self, graph: Graph) -> None:
         """Every dep finishes before its consumer starts; executors never
-        overlap. Raises AssertionError otherwise."""
+        overlap. Raises :class:`GraphValidationError` otherwise (a typed
+        exception, not ``assert`` — validation must survive ``python -O``).
+        ``repro.checks.check_schedule`` is the finding-reporting superset."""
         eps = 1e-12
         for n, (_, start, _) in self.placements.items():
             for d in graph.predecessors(n):
                 _, _, dend = self.placements[d]
-                assert dend <= start + eps, f"{n} starts before dep {d} ends"
+                if dend > start + eps:
+                    raise GraphValidationError(
+                        f"{n} starts before dep {d} ends")
         per_exec: dict[int, list[tuple[float, float, str]]] = {}
         for n, (e, s, t) in self.placements.items():
             per_exec.setdefault(e, []).append((s, t, n))
         for e, iv in per_exec.items():
             iv.sort()
-            for (s0, t0, a), (s1, t1, b) in zip(iv, iv[1:]):
-                assert t0 <= s1 + eps, f"executor {e}: {a} and {b} overlap"
+            for (_s0, t0, a), (s1, _t1, b) in zip(iv, iv[1:]):
+                if t0 > s1 + eps:
+                    raise GraphValidationError(
+                        f"executor {e}: {a} and {b} overlap")
 
 
 def make_schedule(

@@ -139,6 +139,7 @@ def compile_host_plan(
     )
     return StaticHostPlan(
         graph=graph,
+        graph_version=graph.version,
         n_executors=n_exec,
         names=names,
         ids=ids,
@@ -159,6 +160,7 @@ class StaticHostPlan:
     programs.  Immutable; per-run state lives in :class:`_PlanRun`."""
 
     graph: Graph
+    graph_version: int                        # Graph.version at compile time
     n_executors: int
     names: tuple[str, ...]                    # id -> name (insertion order)
     ids: Mapping[str, int]                    # name -> id
@@ -200,6 +202,14 @@ class StaticHostPlan:
         running (dynamic ops or another plan's segments).
         """
         inputs = inputs or {}
+        if self.graph.version != self.graph_version:
+            # same staleness guard as HostScheduler.run: the frozen integer
+            # programs would silently skip any node added since compile
+            raise GraphValidationError(
+                f"graph {self.graph.name!r} mutated (version "
+                f"{self.graph_version} -> {self.graph.version}) after this "
+                "plan was compiled — recompile the plan"
+            )
         if pool is not None and pool.n_executors < self.n_executors:
             raise ValueError(
                 f"plan needs {self.n_executors} executors but pool has "

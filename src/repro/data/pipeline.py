@@ -72,7 +72,9 @@ class SyntheticTokens:
         """This host's row-slice of the global batch (multi-controller)."""
         g = self.batch(step)
         B = self.cfg.global_batch
-        assert B % n_hosts == 0, (B, n_hosts)
+        if B % n_hosts != 0:
+            raise ValueError(
+                f"global batch {B} not divisible by {n_hosts} hosts")
         per = B // n_hosts
         lo = host_id * per
         return {k: v[lo : lo + per] for k, v in g.items()}

@@ -92,10 +92,12 @@ def decode_attention_kernel_call(
 ) -> jax.Array:
     B, Hq, hd = q.shape
     _, S, Hkv, _ = k_cache.shape
-    assert Hq % Hkv == 0
+    if Hq % Hkv != 0:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
     G = Hq // Hkv
     bk = min(block_k, S)
-    assert S % bk == 0, (S, bk)
+    if S % bk != 0:
+        raise ValueError(f"block_k must tile the cache: S={S} bk={bk}")
     n_kv = S // bk
 
     kern = functools.partial(
@@ -201,7 +203,8 @@ def paged_decode_attention_kernel_call(
     B, Hq, hd = q.shape
     P, ps, Hkv, _ = k_pages.shape
     n_pt = page_table.shape[1]
-    assert Hq % Hkv == 0
+    if Hq % Hkv != 0:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
     G = Hq // Hkv
 
     kern = functools.partial(

@@ -107,11 +107,13 @@ def flash_attention_kernel_call(
 ) -> jax.Array:
     B, Hq, Sq, hd = q.shape
     _, Hkv, Skv, _ = k.shape
-    assert Hq % Hkv == 0
+    if Hq % Hkv != 0:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
     G = Hq // Hkv
     bq = min(block_q, Sq)
     bk = min(block_k, Skv)
-    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    if Sq % bq != 0 or Skv % bk != 0:
+        raise ValueError(f"block sizes must tile the sequence: Sq={Sq} bq={bq} Skv={Skv} bk={bk}")
     n_q, n_kv = Sq // bq, Skv // bk
 
     kern = functools.partial(

@@ -44,7 +44,8 @@ def lstm_cell_kernel_call(
     N, _, H = gx.shape
     bn = min(block_n, N)
     bh = min(block_h, H)
-    assert N % bn == 0 and H % bh == 0, (N, bn, H, bh)
+    if N % bn != 0 or H % bh != 0:
+        raise ValueError(f"block sizes must tile the array: N={N} bn={bn} H={H} bh={bh}")
     grid = (N // bn, H // bh)
     h, c_new = pl.pallas_call(
         _kernel,

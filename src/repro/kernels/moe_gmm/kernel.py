@@ -52,7 +52,8 @@ def moe_gmm_kernel_call(
     bc = min(block_c, C)
     bf = min(block_f, F)
     bd = min(block_d, D)
-    assert C % bc == 0 and F % bf == 0 and D % bd == 0, (C, bc, F, bf, D, bd)
+    if C % bc != 0 or F % bf != 0 or D % bd != 0:
+        raise ValueError(f"block sizes must tile the array: C={C} bc={bc} F={F} bf={bf} D={D} bd={bd}")
     grid = (E, C // bc, F // bf, D // bd)
 
     kern = functools.partial(_kernel, n_d=D // bd)

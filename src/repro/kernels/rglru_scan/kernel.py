@@ -56,7 +56,8 @@ def rglru_scan_kernel_call(
     B, S, R = a.shape
     br = min(block_r, R)
     bs = min(block_s, S)
-    assert R % br == 0 and S % bs == 0, (R, br, S, bs)
+    if R % br != 0 or S % bs != 0:
+        raise ValueError(f"block sizes must tile the array: R={R} br={br} S={S} bs={bs}")
     grid = (B, R // br, S // bs)
 
     kern = functools.partial(_kernel, n_seq=S // bs)

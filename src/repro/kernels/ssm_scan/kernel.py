@@ -63,7 +63,8 @@ def ssm_scan_kernel_call(
     B, S, D, St = a.shape
     bd = min(block_d, D)
     bs = min(block_s, S)
-    assert D % bd == 0 and S % bs == 0, (D, bd, S, bs)
+    if D % bd != 0 or S % bs != 0:
+        raise ValueError(f"block sizes must tile the array: D={D} bd={bd} S={S} bs={bs}")
     grid = (B, D // bd, S // bs)
 
     kern = functools.partial(_kernel, n_seq=S // bs)

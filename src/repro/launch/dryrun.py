@@ -76,7 +76,7 @@ def run_cell(arch: str, shape_name: str, mesh, *, want_roofline: bool,
     t0 = time.time()
     try:
         cell = build_cell(arch, shape_name, mesh)
-        for bump in range(MAX_MEMORY_BUMPS + 1):
+        for _bump in range(MAX_MEMORY_BUMPS + 1):
             compiled = cell.lower().compile()
             ma = compiled.memory_analysis()
             bpd = ma.temp_size_in_bytes + ma.argument_size_in_bytes

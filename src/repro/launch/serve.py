@@ -131,6 +131,12 @@ def main() -> int:
     p.add_argument("--calibration-store", default=None,
                    help="JSON path backing the Runtime's calibration store "
                         "(measured op costs survive restarts)")
+    p.add_argument("--check", choices=("off", "basic", "strict"),
+                   default="off",
+                   help="static verification (repro.checks) of the engine's "
+                        "captured graphs/schedules/plans after build: "
+                        "'basic' reports, 'strict' additionally refuses to "
+                        "serve on error findings (continuous/paged only)")
     p.add_argument("--temperature", type=float, default=0.0)
     args = p.parse_args()
 
@@ -171,6 +177,51 @@ def main() -> int:
                   f"{engine.capacity} slots, decode={engine.decode_host_mode}")
     else:
         engine = ServeEngine(cfg, params, scfg)
+
+    if continuous and args.check != "off":
+        # verify the engine's captured executables before serving a single
+        # request; strict mode refuses to serve over a bad artifact
+        import jax.numpy as jnp
+
+        from repro.checks import (Report, cross_graph_hazards, infer_effects,
+                                  shared_buffers)
+
+        rep = Report()
+        exes = [engine._decode_exe]
+        chunk_exe = getattr(engine, "_chunk_exe", None)
+        if chunk_exe is not None:
+            exes.append(chunk_exe)
+        for exe in exes:
+            rep.extend(exe.verify(hazards=True))
+        if chunk_exe is not None:
+            # the decode step scatters into the page pools the chunk graph
+            # reads — both bind the engine's one ``_pages`` object, so alias
+            # discovery is by array identity over the two bound input maps
+            cache_spec = {
+                "len": jnp.zeros((engine.capacity,), jnp.int32),
+                "table": jnp.full((engine.capacity, engine.n_pt), -1,
+                                  jnp.int32),
+                "pages": engine._pages,
+            }
+            tok = jax.ShapeDtypeStruct((engine.capacity, 1), jnp.int32)
+            bind_d = engine._decode_exe.captured.bind(
+                (params, cache_spec, tok))
+            bind_c = chunk_exe.captured.bind(
+                (params, engine._pages,
+                 jnp.full((engine.n_pt,), -1, jnp.int32),
+                 {"tokens": jax.ShapeDtypeStruct((1, engine.chunk),
+                                                 jnp.int32)},
+                 jnp.int32(0), jnp.int32(engine.chunk)))
+            rep.extend(cross_graph_hazards(
+                infer_effects(engine._decode_exe.graph),
+                infer_effects(chunk_exe.graph),
+                shared_buffers(bind_d, bind_c)))
+        print(f"check[{args.check}]: {rep.summary()}")
+        body = rep.render(min_severity="warning")
+        if body != "clean: no findings":
+            print(body)
+        if args.check == "strict":
+            rep.raise_if_errors()
 
     arrivals = build_requests(cfg, n_requests=args.requests, prompt_lens=prompt_lens,
                               max_new=args.max_new, arrival_rate=args.arrival_rate)

@@ -121,7 +121,8 @@ def chunked_attention(
     """
     B, Sq, Hq, hd = q.shape
     _, Skv, Hkv, _ = k.shape
-    assert Hq % Hkv == 0, (Hq, Hkv)
+    if Hq % Hkv != 0:
+        raise ValueError(f"n_heads {Hq} not a multiple of n_kv_heads {Hkv}")
     G = Hq // Hkv
     scale = hd ** -0.5
 

@@ -356,7 +356,7 @@ class Runtime:
         runtime holds exactly one lease for its duration."""
         if self._closed:
             raise RuntimeError("Runtime is closed")
-        self.pool  # materialize before handing out ids
+        _ = self.pool  # materialize before handing out ids
         ids = self._admission.acquire(width, timeout=timeout, prefer=prefer)
         return ExecutorLease(self, ids)
 

@@ -131,7 +131,10 @@ class ServeEngine(_SamplerMixin):
         cfg, scfg = self.cfg, self.scfg
         B = len(wave)
         Ls = {len(r.prompt) for r in wave}
-        assert len(Ls) == 1, "waves are length-bucketed"
+        if len(Ls) != 1:
+            raise RuntimeError(
+                f"wave mixes prompt lengths {sorted(Ls)} — waves are "
+                "length-bucketed")
         toks = np.stack([r.prompt for r in wave]).astype(np.int32)
         cache = transformer.init_cache(cfg, B, scfg.max_len)
         logits, cache = self._prefill(self.params, cache, {"tokens": jnp.asarray(toks)})

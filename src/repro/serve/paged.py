@@ -151,7 +151,8 @@ class PagePool:
 
     def release(self, pid: int) -> None:
         self.ref[pid] -= 1
-        assert self.ref[pid] >= 0, f"page {pid} over-released"
+        if self.ref[pid] < 0:
+            raise RuntimeError(f"page {pid} over-released")
         if self.ref[pid] == 0:
             if pid in self.meta:
                 self.cold[pid] = None            # keep as cold prefix cache

@@ -120,7 +120,9 @@ def make_train_step(
 
         def split(x):
             b = x.shape[0]
-            assert b % n == 0, f"batch {b} not divisible by microbatches {n}"
+            if b % n != 0:
+                raise ValueError(
+                    f"batch {b} not divisible by microbatches {n}")
             return x.reshape((n, b // n) + x.shape[1:])
 
         micro = jax.tree.map(split, batch)

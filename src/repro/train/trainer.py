@@ -85,7 +85,8 @@ class Trainer:
     # -- recovery ------------------------------------------------------------
     def _restore(self) -> int:
         """Roll back to the latest checkpoint; returns the step to resume at."""
-        assert self.ckpt is not None
+        if self.ckpt is None:
+            raise RuntimeError("recovery needs a checkpoint store")
         self.ckpt.wait()
         latest = self.ckpt.latest()
         if latest is None:

@@ -192,7 +192,7 @@ def test_scheduler_rejects_graph_mutation_between_runs():
     sched = HostScheduler(g, 1)
     assert sched.run().outputs["sum"] == 1
     g.add_op("extra", deps=("sum",), flops=1.0, fn=lambda v: v)
-    with pytest.raises(RuntimeError, match="grew"):
+    with pytest.raises(RuntimeError, match="mutated"):
         sched.run()
 
 

@@ -54,7 +54,7 @@ def test_simulator_invariants(g, n_exec, policy):
         per.setdefault(e.executor, []).append((e.start, e.end))
     for iv in per.values():
         iv.sort()
-        for (s0, e0), (s1, e1) in zip(iv, iv[1:]):
+        for (_s0, e0), (s1, _e1) in zip(iv, iv[1:]):
             assert e0 <= s1 + 1e-12
     # makespan lower bounds: critical path and total-work/n
     costs = res.op_costs

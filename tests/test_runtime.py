@@ -213,7 +213,7 @@ def test_dropped_graph_releases_its_cached_plans():
 
 def test_closed_runtime_rejects_new_work():
     rt = Runtime(n_workers=2)
-    rt.pool
+    _ = rt.pool
     rt.close()
     rt.close()                                    # idempotent
     with pytest.raises(RuntimeError, match="closed"):
