@@ -12,11 +12,16 @@ ops -> more queue contention), smaller for GoogleNet (big ops).
 """
 from __future__ import annotations
 
-from repro.core import KNL7250, SimConfig, simulate
+from repro.core import KNL7250, SimConfig, get_policy, simulate
 from repro.models.paper_nets import PAPER_NETS, paper_graph
 from .common import Row, check_band
 
 SETTINGS = [(2, 32), (4, 16), (8, 8), (16, 4), (32, 2)]
+
+# the Graphi-side policy under comparison resolves through the policy
+# registry (repro.core.policies) — swap in any registered name to rerun the
+# table under a different priority heuristic
+GRAPHI_POLICY = "cpf"
 
 
 JITTER = 0.15   # declared calibration: ±15% per-op runtime variation — the
@@ -28,6 +33,7 @@ SEEDS = tuple(range(6))
 def run() -> list[Row]:
     rows: list[Row] = []
     best_gain = {}
+    graphi_policy = get_policy(GRAPHI_POLICY)   # fail fast on unknown names
     for net in PAPER_NETS:
         g = paper_graph(net, "medium")
         ratios = []
@@ -35,7 +41,7 @@ def run() -> list[Row]:
             rs = []
             for seed in SEEDS:
                 cpf = simulate(g, KNL7250, SimConfig(n_executors=n, team_size=k,
-                                                     policy="cpf", jitter=JITTER), seed=seed)
+                                                     policy=graphi_policy, jitter=JITTER), seed=seed)
                 naive = simulate(g, KNL7250, SimConfig(n_executors=n, team_size=k,
                                                        policy="random", jitter=JITTER), seed=seed)
                 rs.append(cpf.makespan / naive.makespan)

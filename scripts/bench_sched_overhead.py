@@ -15,18 +15,28 @@ Two legs, one persistent :class:`ExecutorPool` each:
 
     PYTHONPATH=src python scripts/bench_sched_overhead.py [--out BENCH_sched.json]
 
+A third leg benches the **simulator-guided schedule search**
+(:mod:`repro.core.search`): every registered policy scored on two captured
+model-family decode graphs at several executor configs; the
+``schedule_search`` section of BENCH_sched.json records per-policy
+simulated makespans and the winner per (family, config).
+
 Gates (the ISSUE acceptance criteria):
   * microbench: static per-op overhead >= 1.5x lower than dynamic;
   * every measured static run is bit-identical to the sequential
     ``Graph.execute`` oracle;
-  * decode step: static is no slower than dynamic.
+  * decode step: static is no slower than dynamic;
+  * schedule search: winner <= 1.0x CPF makespan on every (family,
+    config); >= 1 family/config where a non-CPF policy strictly wins;
+    decode outputs of the searched plan bit-exact vs the CPF baseline.
 """
 import argparse
 import json
 import statistics
 import time
 
-from repro.core import KNL7250, compile_host_plan, make_schedule
+from repro.core import (KNL7250, compile_host_plan, list_policies,
+                        make_schedule, search_schedule)
 from repro.core.engine import ExecutorPool, HostScheduler
 from repro.core.static_host import layered_graph
 
@@ -179,6 +189,100 @@ def bench_decode_step(steps: int) -> dict:
     }
 
 
+SEARCH_FAMILIES = ("gemma-2b", "olmoe-1b-7b")
+# configs narrower than the profiled best: contended widths are where the
+# priority heuristic actually decides the makespan (at the profiler's wide
+# optimum every policy saturates and ties)
+SEARCH_CONFIGS = ((2, 8), (4, 4))
+
+
+def bench_schedule_search() -> dict:
+    """Score every registered policy on two captured model-family decode
+    graphs; record per-policy simulated makespans + the winner, and prove
+    the searched decode plan is output-bit-exact vs the CPF baseline."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import api
+    from repro.configs.base import get_config
+    from repro.models import transformer
+    from repro.runtime import Runtime
+    from repro.serve.step import make_decode_step
+
+    B, max_len = 4, 32
+    families: dict[str, dict] = {}
+    strict_wins: list[str] = []
+    for arch in SEARCH_FAMILIES:
+        cfg = get_config(arch, smoke=True).reduced(vocab_size=128)
+        params = transformer.init_params(cfg, jax.random.key(0))
+        cache = transformer.init_cache(cfg, B, max_len, per_slot=True)
+        toks = jnp.ones((B, 1), jnp.int32)
+        exe = api.compile(
+            make_decode_step(cfg), params, cache, toks, hw=KNL7250,
+            backend="sim", jit_nodes=True, schedule_search="off",
+            name=f"sched_search[{arch}]",
+        )
+        costs = exe.profile.op_costs
+        configs = []
+        for n, k in SEARCH_CONFIGS:
+            res = search_schedule(exe.graph, KNL7250, n_executors=n,
+                                  team_size=k, costs=costs)
+            gate(res.makespan_sim <= res.cpf_makespan + 1e-15,
+                 f"{arch} {n}x{k}: searched winner {res.makespan_sim} "
+                 f"worse than CPF {res.cpf_makespan}")
+            if res.policy != "cpf" and \
+                    res.makespan_sim < res.cpf_makespan * (1.0 - 1e-9):
+                strict_wins.append(f"{arch}@{n}x{k}:{res.policy}")
+            configs.append({
+                "config": f"{n}x{k}",
+                "winner": res.policy,
+                "seed": res.seed,
+                "winner_makespan_us": round(res.makespan_sim * 1e6, 4),
+                "cpf_makespan_us": round(res.cpf_makespan * 1e6, 4),
+                "gain_over_cpf_pct": round(100.0 * res.gain_over_cpf, 3),
+                "runner_up_gap_pct": round(100.0 * res.runner_up_gap, 3),
+                "per_policy_makespan_us": {
+                    p: round(m * 1e6, 4) for p, m in res.by_policy().items()
+                },
+            })
+        families[arch] = {"n_nodes": len(exe.graph),
+                          "width": exe.graph.width(),
+                          "configs": configs}
+    gate(strict_wins,
+         "no (family, config) where a non-CPF policy strictly beat CPF")
+
+    # -- decode bit-exactness: searched plan vs CPF baseline ----------------
+    n, k = SEARCH_CONFIGS[0]
+    cfg = get_config(SEARCH_FAMILIES[0], smoke=True).reduced(vocab_size=128)
+    params = transformer.init_params(cfg, jax.random.key(0))
+    cache = transformer.init_cache(cfg, B, max_len, per_slot=True)
+    toks = jnp.ones((B, 1), jnp.int32)
+    outs = {}
+    with Runtime() as rt:
+        for mode in ("off", "force"):
+            exe = api.compile(
+                make_decode_step(cfg), params, cache, toks, hw=KNL7250,
+                backend="host", jit_nodes=True, host_mode="static",
+                n_executors=n, team_size=k, runtime=rt,
+                schedule_search=mode, name=f"bitexact[{mode}]",
+            )
+            res = exe.execute_host(exe.captured.bind((params, cache, toks)))
+            outs[mode] = jax.tree.leaves(exe.captured.unflatten(res.outputs))
+            outs[mode] = [np.asarray(x) for x in jax.block_until_ready(outs[mode])]
+    bit_exact = all(np.array_equal(a, b)
+                    for a, b in zip(outs["off"], outs["force"]))
+    gate(bit_exact,
+         "decode outputs diverged between the searched plan and CPF")
+    return {
+        "bench": "schedule_search",
+        "policies": list_policies(),
+        "families": families,
+        "strict_wins": strict_wins,
+        "decode_bit_exact_vs_cpf": bit_exact,
+    }
+
+
 def main() -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--out", default="BENCH_sched.json")
@@ -191,8 +295,10 @@ def main() -> int:
     micro = bench_micro(args.repeats, args.executors)
     step = bench_decode_step(args.steps)
     strict = bench_check_overhead(args.repeats, args.executors)
+    search = bench_schedule_search()
     payload = {"total_wall_s": round(time.time() - t0, 2),
-               "rows": [micro, step, strict]}
+               "rows": [micro, step, strict],
+               "schedule_search": search}
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1)
 
@@ -205,6 +311,14 @@ def main() -> int:
     print(f"{strict['bench']:18s} plain={strict['plain_build_ms']:8.2f}ms "
           f"strict={strict['strict_build_ms']:8.2f}ms "
           f"overhead={strict['overhead_pct']:+.1f}%")
+    for arch, fam in search["families"].items():
+        for c in fam["configs"]:
+            print(f"schedule_search    {arch:12s} {c['config']:4s} "
+                  f"winner={c['winner']}@{c['seed']} "
+                  f"gain={c['gain_over_cpf_pct']:+.3f}% "
+                  f"runner_up_gap={c['runner_up_gap_pct']:.3f}%")
+    print(f"schedule_search    strict_wins={search['strict_wins']} "
+          f"bit_exact={search['decode_bit_exact_vs_cpf']}")
     print(f"wrote {args.out} ({payload['total_wall_s']}s)")
 
     # ISSUE gates: static must cut per-op scheduling overhead >= 1.5x on the

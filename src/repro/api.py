@@ -38,6 +38,7 @@ Backends
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Any, Mapping
 
 from repro.core.capture import CapturedGraph, capture
@@ -46,6 +47,7 @@ from repro.core.engine import ExecutorPool, HostRunResult, HostScheduler
 from repro.core.graph import Graph
 from repro.core.profiler import ProfileResult, measure_op_costs, profile
 from repro.core.scheduler import Schedule, make_schedule, slot_assignment
+from repro.core.search import SearchResult, search_schedule
 from repro.core.simulate import SimConfig, SimResult, simulate
 from repro.core.static_host import StaticHostPlan, compile_host_plan
 from repro.runtime import Runtime, default_runtime, graph_signature
@@ -53,15 +55,23 @@ from repro.runtime import Runtime, default_runtime, graph_signature
 __all__ = ["Executable", "compile", "serve_engine"]
 
 
-def _cost_fp(costs: Mapping[str, float] | None) -> int | None:
-    """Content fingerprint of a cost table for runtime cache keys (two
-    executables over one graph share plans only when their cost models
-    agree)."""
-    return None if costs is None else hash(frozenset(costs.items()))
+def _cost_fp(costs: Mapping[str, float] | None) -> str | None:
+    """Content fingerprint of a cost table (two executables over one graph
+    share plans only when their cost models agree).  A *stable* sha over
+    sorted items — not ``hash(frozenset)`` — because the fingerprint is also
+    part of the persisted schedule-search config key, which must mean the
+    same thing across processes (``PYTHONHASHSEED`` varies ``hash``)."""
+    if costs is None:
+        return None
+    h = hashlib.sha256()
+    for k in sorted(costs):
+        h.update(f"{k}:{float(costs[k])!r};".encode())
+    return h.hexdigest()[:16]
 
 _BACKENDS = ("host", "sim", "mesh")
 _HOST_MODES = ("dynamic", "static")
 _CHECK_MODES = ("off", "basic", "strict")
+_SEARCH_MODES = ("off", "auto", "force")
 
 
 class Executable:
@@ -90,6 +100,7 @@ class Executable:
         runtime: Runtime | None = None,
         signature: str | None = None,
         check: str = "basic",
+        schedule_search: str = "auto",
     ):
         if backend not in _BACKENDS:
             raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
@@ -99,6 +110,10 @@ class Executable:
         if check not in _CHECK_MODES:
             raise ValueError(
                 f"check must be one of {_CHECK_MODES}, got {check!r}")
+        if schedule_search not in _SEARCH_MODES:
+            raise ValueError(
+                f"schedule_search must be one of {_SEARCH_MODES}, "
+                f"got {schedule_search!r}")
         if check != "off":
             # structural graph verification (repro.checks G-* rules): O(V+E),
             # runs once per executable — a malformed graph fails loudly here,
@@ -120,6 +135,9 @@ class Executable:
         self.host_mode = host_mode
         self.runtime = runtime
         self.signature = signature
+        self.schedule_search = schedule_search
+        self._search: SearchResult | None = None   # last search this exe ran
+        self._search_hit: dict | None = None       # last store-replayed record
         self._host: HostScheduler | None = None
         self._host_key: tuple | None = None
         self._host_plans: dict[int, StaticHostPlan] = {}
@@ -181,6 +199,8 @@ class Executable:
         self._host_key = None
         self._host_plans.clear()    # plans froze the invalidated schedule
         self._planned = None        # best executor count may have moved
+        self._search = None         # a searched winner is per cost model
+        self._search_hit = None
         if self.runtime is not None:
             self.runtime.invalidate(self._graph)
         return self._profile
@@ -188,10 +208,17 @@ class Executable:
     @property
     def schedule(self) -> Schedule:
         if self._schedule is None:
-            self._schedule = self.schedule_for(self.policy)
+            n_exec, team = self._pin
+            if n_exec is None or team is None:
+                p = self.profile
+                n_exec = n_exec or p.best_n_executors
+                team = team or p.best_team_size
+            self._schedule = self._plan_schedule(n_exec, team)
         return self._schedule
 
     def schedule_for(self, policy: str) -> Schedule:
+        """A schedule under an *explicit* policy (registry name or naive
+        baseline) at the profiled config — comparison runs; never searched."""
         n_exec, team = self._pin
         if n_exec is None or team is None:
             p = self.profile
@@ -202,6 +229,73 @@ class Executable:
             self._graph, self.hw, n_executors=n_exec, team_size=team,
             policy=policy, costs=costs,
         )
+
+    @property
+    def search_active(self) -> bool:
+        """Whether schedule planning runs the simulator-guided policy search
+        (:mod:`repro.core.search`).  ``"force"`` always searches; ``"auto"``
+        (the default) searches once a *measured* cost table backs the
+        executable — searching on analytic costs would optimize the model,
+        not the machine — and only for the default CPF policy (an explicit
+        ``policy=`` pin means the caller chose their heuristic)."""
+        if self.schedule_search == "off":
+            return False
+        if self.schedule_search == "force":
+            return True
+        return self._measured is not None and self.policy == "cpf"
+
+    def _config_key(self, n_exec: int, team: int,
+                    costs: Mapping[str, float] | None) -> str:
+        """The per-signature store key a searched winner persists under:
+        executor config x cost-model fingerprint (search once per graph,
+        width, and cost table — across processes)."""
+        return f"{n_exec}x{team}|{_cost_fp(costs) or 'analytic'}"
+
+    def _plan_schedule(self, n_exec: int, team: int) -> Schedule:
+        """The schedule the executable freezes at config (n_exec, team):
+        plain ``self.policy`` when search is off, else the searched winner —
+        replayed from the runtime store when this (graph signature, config,
+        cost model) was already searched, run (and persisted) otherwise."""
+        costs = dict(self._measured(team)) if self._measured is not None else None
+        if not self.search_active:
+            return make_schedule(
+                self._graph, self.hw, n_executors=n_exec, team_size=team,
+                policy=self.policy, costs=costs,
+            )
+        store = (self.runtime.calibration
+                 if self.runtime is not None and self.signature is not None
+                 else None)
+        ck = self._config_key(n_exec, team, costs)
+        if store is not None:
+            rec = store.get_schedule(self.signature, ck)
+            if rec is not None:
+                try:
+                    sched = make_schedule(
+                        self._graph, self.hw, n_executors=n_exec,
+                        team_size=team, policy=rec["policy"],
+                        seed=int(rec.get("seed", 0)), costs=costs,
+                    )
+                except (ValueError, KeyError):
+                    # record names a policy this build doesn't register —
+                    # fall through and search again rather than fail compile
+                    pass
+                else:
+                    self._search_hit = dict(rec)
+                    return sched
+        # module-level entry point on purpose: tests monkeypatch
+        # repro.api.search_schedule to prove a second compile() replays the
+        # stored winner without re-searching
+        res = search_schedule(
+            self._graph, self.hw, n_executors=n_exec, team_size=team,
+            costs=costs,
+        )
+        self._search = res
+        self._search_hit = None
+        if store is not None:
+            # search_schedule already verified the winner against the
+            # repro.checks S-rules — only vetted schedules are persisted
+            store.put_schedule(self.signature, ck, res.record())
+        return res.schedule
 
     @property
     def slots(self) -> list[list[str]]:
@@ -319,15 +413,33 @@ class Executable:
         sched = self.schedule
         cp_len, cp = self.critical_path
         seq = sequential_makespan(self.hw, g, sched.team_size)
+        if self._search is not None:
+            r = self._search
+            search_line = (
+                f"\n  schedule search: winner={r.policy!r} seed={r.seed} "
+                f"makespan_sim={r.makespan_sim:.3e}s "
+                f"gain_over_cpf={100.0 * r.gain_over_cpf:.2f}% "
+                f"runner_up_gap={100.0 * r.runner_up_gap:.2f}%"
+            )
+        elif self._search_hit is not None:
+            r = self._search_hit
+            search_line = (
+                f"\n  schedule search: winner={r['policy']!r} "
+                f"seed={r.get('seed', 0)} "
+                f"makespan_sim={r['makespan_sim']:.3e}s (replayed from store)"
+            )
+        else:
+            search_line = ""
         return (
             f"Executable({g.name!r}, backend={self.backend!r}, hw={self.hw.name})\n"
             f"  nodes={len(g)} width={g.width()} flops={g.total_flops():.3g}\n"
             f"  config: {sched.n_executors} executors x {sched.team_size} workers "
-            f"({self.policy})\n"
+            f"({sched.policy})\n"
             f"  makespan={sched.makespan:.3e}s sequential={seq:.3e}s "
             f"speedup={seq / sched.makespan if sched.makespan else 0.0:.2f}x\n"
             f"  critical path ({cp_len:.3e}s, {len(cp)} ops): "
             f"{' -> '.join(cp[:6])}{' ...' if len(cp) > 6 else ''}"
+            f"{search_line}"
         )
 
     # -- execution ----------------------------------------------------------
@@ -386,12 +498,11 @@ class Executable:
         def build() -> StaticHostPlan:
             sched = self.schedule
             if sched.n_executors != n_executors:
-                costs = (dict(self._measured(sched.team_size))
-                         if self._measured is not None else None)
-                sched = make_schedule(
-                    self._graph, self.hw, n_executors=n_executors,
-                    team_size=sched.team_size, policy=self.policy, costs=costs,
-                )
+                # re-plan at exactly the requested width — through the same
+                # search-or-policy path as the default schedule, so a
+                # searched executable freezes searched placements at every
+                # width it runs at
+                sched = self._plan_schedule(n_executors, sched.team_size)
             plan = compile_host_plan(self._graph, sched, n_executors=n_executors)
             if self.check == "strict":
                 # verify every freshly-built plan (repro.checks S-*/P-*
@@ -409,7 +520,12 @@ class Executable:
             return plan
         if self.runtime is not None:
             sched = self.schedule
-            key = ("plan", n_executors, sched.team_size, self.policy,
+            # keyed by the *frozen schedule's* identity (policy, seed) — a
+            # searched executable must not collide with a plain-CPF one over
+            # the same graph — plus the search mode, since at a different
+            # width build() re-plans through search-or-policy again
+            key = ("plan", n_executors, sched.team_size, sched.policy,
+                   sched.seed, self.search_active,
                    _cost_fp(sched.op_costs or None))
             plan = self.runtime.cached(self._graph, key, build)
         else:
@@ -596,6 +712,7 @@ def compile(
     host_mode: str = "dynamic",
     runtime: Runtime | None = None,
     check: str = "basic",
+    schedule_search: str = "auto",
 ) -> Executable:
     """Turn a JAX function (or a pre-built :class:`Graph`) into a scheduled
     :class:`Executable`.
@@ -621,6 +738,14 @@ def compile(
     ``"off"`` — none; ``"basic"`` (default) — O(V+E) graph structural rules
     at compile time; ``"strict"`` — additionally verify every freshly built
     host plan (schedule feasibility + plan invariants) before it runs.
+    ``schedule_search`` controls the simulator-guided policy search
+    (:mod:`repro.core.search`): ``"auto"`` (default) searches every
+    registered policy for the min-makespan schedule once a *measured* cost
+    table backs the executable (``calibrate()`` or a calibration-store
+    hit); ``"force"`` searches even on analytic costs; ``"off"`` always
+    schedules with ``policy``.  Winners persist in the runtime's store per
+    graph signature, so the search runs once per (graph, executor config,
+    cost model) across processes.
     """
     captured: CapturedGraph | None = None
     if isinstance(target, CapturedGraph):
@@ -656,6 +781,7 @@ def compile(
         runtime=runtime,
         signature=signature,
         check=check,
+        schedule_search=schedule_search,
     )
     if runtime is not None:
         costs = runtime.calibration.get(signature)

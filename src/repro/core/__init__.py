@@ -15,8 +15,18 @@ from .cost_model import (
 )
 from .engine import HostRunResult, HostScheduler
 from .graph import Graph, GraphValidationError, OpNode
+from .policies import (
+    NAIVE_POLICIES,
+    PolicyContext,
+    SchedulePolicy,
+    get_policy,
+    list_policies,
+    register_policy,
+    unregister_policy,
+)
 from .profiler import ProfileResult, enumerate_symmetric_configs, measure_op_costs, profile
 from .scheduler import Schedule, make_schedule, slot_assignment
+from .search import SearchResult, search_schedule
 from .simulate import SimConfig, SimResult, TraceEvent, simulate
 from .static_host import StaticHostPlan, compile_host_plan
 from .trace import ascii_timeline, trace_csv
@@ -40,8 +50,12 @@ __all__ = [
     "capture",
     "HostRunResult",
     "HostScheduler",
+    "NAIVE_POLICIES",
+    "PolicyContext",
     "ProfileResult",
     "Schedule",
+    "SchedulePolicy",
+    "SearchResult",
     "SimConfig",
     "SimResult",
     "StaticHostPlan",
@@ -51,9 +65,11 @@ __all__ = [
     "trace_csv",
     "diagonals",
     "enumerate_symmetric_configs",
+    "get_policy",
     "graph_costs",
     "interference_multiplier",
     "is_wavefront_order",
+    "list_policies",
     "lstm_cell",
     "make_schedule",
     "measure_op_costs",
@@ -61,9 +77,12 @@ __all__ = [
     "op_time",
     "profile",
     "recurrence_graph",
+    "register_policy",
+    "search_schedule",
     "sequential_lstm",
     "sequential_makespan",
     "simulate",
     "slot_assignment",
     "stacked_wavefront_lstm",
+    "unregister_policy",
 ]

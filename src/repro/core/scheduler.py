@@ -1,10 +1,13 @@
 """Schedulers for computation graphs (paper §4.3).
 
-``make_schedule`` runs the online engine (noise-free) under a policy and
-returns a :class:`Schedule`: per-op (executor, start, end) plus the derived
-*slot* structure used by the static plan compiler (slots = barrier-separated
-groups of mutually independent ops, at most ``n_executors`` wide — the
-spatial-multiplexing unit on an SPMD mesh, see DESIGN.md §2.1).
+``make_schedule`` runs the online engine (noise-free) under a policy —
+resolved by name through the :mod:`repro.core.policies` registry, so CPF,
+level-packing, LPT, perturbed CPF, and anything user-registered all flow
+through the same entry point — and returns a :class:`Schedule`: per-op
+(executor, start, end) plus the derived *slot* structure used by the static
+plan compiler (slots = barrier-separated groups of mutually independent
+ops, at most ``n_executors`` wide — the spatial-multiplexing unit on an
+SPMD mesh, see DESIGN.md §2.1).
 """
 from __future__ import annotations
 
@@ -12,6 +15,7 @@ from dataclasses import dataclass, field
 
 from .cost_model import HardwareModel
 from .graph import Graph, GraphValidationError
+from .policies import NAIVE_POLICIES, SchedulePolicy, get_policy
 from .simulate import SimConfig, SimResult, simulate
 
 __all__ = ["Schedule", "make_schedule", "slot_assignment"]
@@ -27,6 +31,10 @@ class Schedule:
     # name -> (executor, start, end)
     placements: dict[str, tuple[int, float, float]]
     op_costs: dict[str, float] = field(repr=False, default_factory=dict)
+    # the simulation seed the schedule was produced under: with the policy
+    # name, enough to replay a randomized policy's exact schedule (the
+    # searched-winner records in the format-2 calibration store)
+    seed: int = 0
 
     def start_order(self) -> list[str]:
         return sorted(self.placements, key=lambda n: (self.placements[n][1], n))
@@ -73,10 +81,17 @@ def make_schedule(
     *,
     n_executors: int,
     team_size: int,
-    policy: str = "cpf",
+    policy: "str | SchedulePolicy" = "cpf",
     costs: dict[str, float] | None = None,
     seed: int = 0,
 ) -> Schedule:
+    """Schedule ``graph`` under ``policy`` (a registry name or a
+    :class:`~repro.core.policies.SchedulePolicy` instance; the naive
+    shared-queue baselines ``"fifo"``/``"random"`` pass through for
+    comparison runs).  ``seed`` feeds randomized policies — (policy, seed)
+    replays the identical schedule."""
+    if not (isinstance(policy, str) and policy in NAIVE_POLICIES):
+        policy = get_policy(policy)   # fail fast on unknown names
     cfg = SimConfig(
         n_executors=n_executors,
         team_size=team_size,
@@ -90,12 +105,13 @@ def make_schedule(
     placements = {e.op: (e.executor, e.start, e.end) for e in res.trace}
     return Schedule(
         graph_name=graph.name,
-        policy=policy,
+        policy=policy if isinstance(policy, str) else policy.name,
         n_executors=n_executors,
         team_size=team_size,
         makespan=res.makespan,
         placements=placements,
         op_costs=res.op_costs,
+        seed=seed,
     )
 
 

@@ -10,15 +10,27 @@ model (optionally jittered to model run-time variation, paper §4.3).
 
 Policies
 --------
-* ``cpf``    — critical-path-first: ready ops ordered by *level* (longest
-  accumulated cost to the sink), scheduler pushes to per-executor buffers.
-  Dispatch costs ``cpf_push_cost`` (serialized at the scheduler core, cheap —
-  bitmap scan + ring-buffer push).
+``SimConfig.policy`` is either a *registry* policy — a name (or instance)
+resolved through :mod:`repro.core.policies`: ``cpf``, ``level-pack``,
+``lpt``, ``cpf-perturb``, plus anything user-registered — or one of the two
+naive shared-queue baselines the paper compares against:
+
+* registry policies run the Graphi dispatch path: centralized scheduler
+  orders ready ops by the policy's priority (stable node-id tiebreak) and
+  pushes to per-executor buffers; dispatch costs ``cpf_push_cost``
+  (serialized at the scheduler core, cheap — bitmap scan + ring-buffer
+  push).  A policy's optional executor-assignment hook steers ops among
+  the executors free earliest.
 * ``fifo``   — naive shared queue in trigger order (TensorFlow/MXNet style).
   Each dequeue serializes on the queue lock and costs
   ``queue_base_cost + queue_contention_cost × (#free executors polling)``.
 * ``random`` — naive shared queue, arbitrary ready op (MXNet-style "any
   executor grabs any ready op").
+
+Determinism: ready ops with equal priority pop in stable **node-id order**
+(graph insertion index), never in dict/hash order, so two simulations of
+one graph produce identical traces — the schedule-search winner is
+reproducible run to run (tests/test_policies_search.py).
 """
 from __future__ import annotations
 
@@ -28,6 +40,7 @@ from dataclasses import dataclass, field
 
 from .cost_model import HardwareModel, graph_costs
 from .graph import Graph
+from .policies import NAIVE_POLICIES, PolicyContext, SchedulePolicy, get_policy
 
 __all__ = ["SimConfig", "SimResult", "TraceEvent", "simulate"]
 
@@ -44,7 +57,8 @@ class TraceEvent:
 class SimConfig:
     n_executors: int
     team_size: int
-    policy: str = "cpf"              # cpf | fifo | random
+    # a repro.core.policies registry name/instance, or "fifo"/"random"
+    policy: "str | SchedulePolicy" = "cpf"
     # dispatch-path costs (seconds).  The shared-queue costs are calibrated
     # to KNL lock handoff under contention (cache-line ping-pong across the
     # 2D mesh at 1.4 GHz is ~us-scale per waiter; the paper's Table-2
@@ -102,8 +116,8 @@ def simulate(
     seed: int = 0,
 ) -> SimResult:
     """Run the event-driven engine simulation and return the makespan+trace."""
-    if cfg.policy not in ("cpf", "fifo", "random"):
-        raise ValueError(f"unknown policy {cfg.policy!r}")
+    naive = isinstance(cfg.policy, str) and cfg.policy in NAIVE_POLICIES
+    policy: SchedulePolicy | None = None if naive else get_policy(cfg.policy)
     rng = random.Random(seed)
 
     if costs is None:
@@ -112,29 +126,42 @@ def simulate(
 
     indeg = {n: graph.in_degree(n) for n in graph.names}
     ready_time: dict[str, float] = {}
+    # stable node-id order (graph insertion index): THE tiebreak for
+    # equal-priority ready ops, and the only ordering policies' priority
+    # dicts are ever combined with — never dict/hash order.  This is what
+    # makes search scores (and the chosen winner) reproducible run-to-run.
+    seq = {n: i for i, n in enumerate(graph.names)}
 
-    # ready-op container per policy
-    cpf_heap: list[tuple[float, str]] = []            # (-level, name)
+    if policy is not None:
+        ctx = PolicyContext(
+            graph=graph, costs=costs, levels=levels,
+            depths=graph.depth_levels(), n_executors=cfg.n_executors,
+            seed=seed,
+        )
+        prio = policy.priorities(ctx)
+
+    # ready-op container: priority heap for registry policies, trigger-order
+    # list for the naive shared-queue baselines
+    ready_heap: list[tuple[float, int, str]] = []     # (-priority, node_id, name)
     fifo_list: list[str] = []
-    seq = {n: i for i, n in enumerate(graph.names)}   # deterministic tiebreak
 
     def push_ready(n: str, t: float) -> None:
         ready_time[n] = t
-        if cfg.policy == "cpf":
-            heapq.heappush(cpf_heap, (-levels[n], seq[n], n))  # type: ignore[arg-type]
+        if policy is not None:
+            heapq.heappush(ready_heap, (-prio[n], seq[n], n))
         else:
             fifo_list.append(n)
 
     def pop_ready() -> str:
-        if cfg.policy == "cpf":
-            return heapq.heappop(cpf_heap)[-1]
+        if policy is not None:
+            return heapq.heappop(ready_heap)[-1]
         if cfg.policy == "fifo":
             return fifo_list.pop(0)
         i = rng.randrange(len(fifo_list))
         return fifo_list.pop(i)
 
     def have_ready() -> bool:
-        return bool(cpf_heap) if cfg.policy == "cpf" else bool(fifo_list)
+        return bool(ready_heap) if policy is not None else bool(fifo_list)
 
     for n in graph.names:
         if indeg[n] == 0:
@@ -170,23 +197,34 @@ def simulate(
                 continue
             heapq.heappop(exec_free)
             op = pop_ready()
-            if cfg.cache_affinity:
+            want: int | None = None
+            if policy is not None:
+                # the policy's assignment hook picks among executors free no
+                # later than the earliest one — a placement choice only,
+                # never a delay
+                free_now = tuple(sorted(
+                    [e] + [e2 for ft2, e2 in exec_free if ft2 <= ft]))
+                want = policy.assign_executor(ctx, op, free_now)
+            if want is None and cfg.cache_affinity:
                 # prefer the producer of op's (first) input when it is also
                 # free at the same time (the paper's "preferred executor")
                 prefs = {producer_exec.get(d) for d in graph.predecessors(op)}
                 if e not in prefs:
-                    for i, (ft2, e2) in enumerate(exec_free):
-                        if ft2 <= ft and e2 in prefs:
-                            exec_free[i] = (ft, e)
-                            heapq.heapify(exec_free)
-                            e = e2
-                            break
+                    want = next((e2 for ft2, e2 in exec_free
+                                 if ft2 <= ft and e2 in prefs), None)
+            if want is not None and want != e:
+                for i, (ft2, e2) in enumerate(exec_free):
+                    if e2 == want and ft2 <= ft:
+                        exec_free[i] = (ft, e)
+                        heapq.heapify(exec_free)
+                        e = want
+                        break
             t0 = max(ft, ready_time[op])
             # dispatch serialization.  Naive shared queue: every executor
             # polls the one lock continuously (paper §3.1 "heavy concurrent
             # use"), so each dequeue pays handoff x #executors — not just
             # the currently-idle ones.
-            if cfg.policy == "cpf":
+            if policy is not None:
                 deq = cfg.cpf_push_cost
             else:
                 deq = cfg.queue_base_cost + cfg.queue_contention_cost * cfg.n_executors

@@ -151,6 +151,8 @@ def compile_host_plan(
         programs=tuple(tuple(p) for p in programs),
         input_ids=input_ids,
         seeds=seeds,
+        policy=schedule.policy,
+        seed=schedule.seed,
     )
 
 
@@ -172,6 +174,10 @@ class StaticHostPlan:
     programs: tuple[tuple[int, ...], ...]     # executor -> owned ids
     input_ids: tuple[int, ...]                # resolved inline from inputs
     seeds: tuple[tuple[int, ...], ...]        # executor -> ready-at-start ids
+    # provenance: the scheduling policy (+ its seed) whose placements this
+    # plan froze — "cpf", or a searched winner such as "cpf-perturb"
+    policy: str = "cpf"
+    seed: int = 0
 
     @property
     def n_ops(self) -> int:
@@ -180,9 +186,11 @@ class StaticHostPlan:
 
     def describe(self) -> str:
         widths = ",".join(str(len(p)) for p in self.programs)
+        pol = self.policy if self.seed == 0 else f"{self.policy}@{self.seed}"
         return (
             f"StaticHostPlan({self.graph.name!r}, {self.n_executors} executors, "
-            f"{self.n_ops} ops [{widths}], {len(self.input_ids)} inputs)"
+            f"{self.n_ops} ops [{widths}], {len(self.input_ids)} inputs, "
+            f"policy={pol})"
         )
 
     # -- execution ----------------------------------------------------------

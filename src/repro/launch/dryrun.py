@@ -57,6 +57,9 @@ def graphi_record(cell, arch: str, shape_name: str, runtime=None) -> dict:
         "width": g.width(),
         "n_executors": prof.best_n_executors,
         "team_size": prof.best_team_size,
+        # the frozen schedule's registry policy (a searched executable may
+        # freeze a non-CPF winner; sim-only cells stay "cpf")
+        "policy": exe.schedule.policy,
         "sim_makespan_s": prof.best_makespan,
         "critical_path_s": cp_len,
         "critical_path_ops": len(cp),

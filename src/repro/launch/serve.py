@@ -131,6 +131,13 @@ def main() -> int:
     p.add_argument("--calibration-store", default=None,
                    help="JSON path backing the Runtime's calibration store "
                         "(measured op costs survive restarts)")
+    p.add_argument("--schedule-search", choices=("off", "auto", "force"),
+                   default="auto",
+                   help="simulator-guided schedule search over registered "
+                        "policies: 'auto' (default) searches once the decode "
+                        "graph is calibrated, 'force' always, 'off' plain "
+                        "CPF; winners persist in the calibration store "
+                        "(continuous/paged only)")
     p.add_argument("--check", choices=("off", "basic", "strict"),
                    default="off",
                    help="static verification (repro.checks) of the engine's "
@@ -162,7 +169,8 @@ def main() -> int:
             engine = PagedEngine(cfg, params, scfg, paged=pcfg,
                                  max_executors=args.max_executors,
                                  runtime=runtime,
-                                 decode_host_mode=args.decode_host_mode)
+                                 decode_host_mode=args.decode_host_mode,
+                                 schedule_search=args.schedule_search)
             print(f"paged engine: {engine.n_executors} executors leased of "
                   f"{runtime.n_workers}, {engine.capacity} slots, "
                   f"{engine.page_pool.n_pages} pages x {pcfg.page_size} tok, "
@@ -171,7 +179,8 @@ def main() -> int:
             engine = ContinuousEngine(cfg, params, scfg,
                                       max_executors=args.max_executors,
                                       runtime=runtime,
-                                      decode_host_mode=args.decode_host_mode)
+                                      decode_host_mode=args.decode_host_mode,
+                                      schedule_search=args.schedule_search)
             print(f"continuous engine: {engine.n_executors} executors leased of "
                   f"{runtime.n_workers} (profiled best {engine.profile.best_config}), "
                   f"{engine.capacity} slots, decode={engine.decode_host_mode}")

@@ -41,6 +41,12 @@ def main() -> int:
     p.add_argument("--calibration-store", default=None,
                    help="JSON path backing the process Runtime's calibration "
                         "store (shared with any serve engine in this process)")
+    p.add_argument("--schedule-search", choices=("off", "auto", "force"),
+                   default="auto",
+                   help="simulator-guided schedule search for the Graphi "
+                        "loss-graph schedule: 'auto' searches when measured "
+                        "costs back the graph, 'force' always, 'off' plain "
+                        "CPF")
     args = p.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -56,11 +62,13 @@ def main() -> int:
     if not args.no_graphi:
         from repro.train.step import compile_lm_loss
 
-        exe = compile_lm_loss(cfg, shape, backend="sim", runtime=runtime)
+        exe = compile_lm_loss(cfg, shape, backend="sim", runtime=runtime,
+                              schedule_search=args.schedule_search)
         scheduled_makespan = exe.schedule.makespan
         print(f"graphi: loss graph {len(exe.graph)} nodes, width "
               f"{exe.graph.width()}, {exe.schedule.n_executors}x"
-              f"{exe.schedule.team_size} executors, scheduled makespan "
+              f"{exe.schedule.team_size} executors ({exe.schedule.policy}), "
+              f"scheduled makespan "
               f"{scheduled_makespan * 1e3:.2f} ms ({runtime.describe()})")
 
     from repro.optim.adamw import AdamWConfig

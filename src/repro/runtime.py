@@ -74,21 +74,38 @@ def graph_signature(graph: Graph, variant: str = "") -> str:
 
 
 class CalibrationStore:
-    """Measured op-cost tables keyed by :func:`graph_signature`.
+    """Measured op-cost tables and searched-schedule winners, keyed by
+    :func:`graph_signature`.
 
-    Entries are ``{op_name: seconds}`` dicts from
-    :func:`~repro.core.profiler.measure_op_costs`.  With a ``path`` the
-    store loads existing entries at construction and autosaves (atomic
-    tmp+rename) on every :meth:`put`, so ``calibrate()`` results survive
-    restarts.  Thread-safe: a serve engine calibrating and a trainer
-    reading may race.
+    Each signature owns two sections (JSON ``format: 2``):
+
+    * ``costs`` — ``{op_name: seconds}`` from
+      :func:`~repro.core.profiler.measure_op_costs`;
+    * ``schedule`` — searched-winner records from
+      :func:`~repro.core.search.search_schedule`, keyed by a *config key*
+      (width × team × cost fingerprint, see ``api._cost_fp``): the
+      ``{policy, seed, makespan_sim, runner_up_gap}`` dict that replays the
+      winning schedule deterministically, so the simulator search runs once
+      per (graph, executor config, cost model) across processes.
+
+    Format-1 files (bare ``{sig: {op: seconds}}`` entries) still load —
+    they migrate to cost-only sections in memory and are rewritten as
+    format 2 on the next save.  Unknown *future* formats raise a
+    :class:`ValueError` naming the file rather than guessing.
+
+    With a ``path`` the store loads existing entries at construction and
+    autosaves (atomic tmp+rename) on every :meth:`put` /
+    :meth:`put_schedule`.  Thread-safe: a serve engine calibrating and a
+    trainer reading may race.
     """
 
-    _FORMAT = 1
+    _FORMAT = 2
 
     def __init__(self, path: str | None = None):
         self.path = path
         self._entries: dict[str, dict[str, float]] = {}
+        # signature -> config_key -> winner record (JSON-able dict)
+        self._schedules: dict[str, dict[str, dict]] = {}
         self._lock = threading.Lock()
         self._io_lock = threading.Lock()   # serializes concurrent save()s
         if path is not None and os.path.exists(path):
@@ -111,45 +128,90 @@ class CalibrationStore:
         if self.path is not None:
             self.save(self.path)
 
+    def get_schedule(self, signature: str, config_key: str) -> dict | None:
+        """The persisted search winner for (graph signature, config key),
+        or ``None`` when that search has not run yet."""
+        with self._lock:
+            rec = self._schedules.get(signature, {}).get(config_key)
+            return dict(rec) if rec is not None else None
+
+    def put_schedule(self, signature: str, config_key: str, record: Mapping) -> None:
+        """Persist a search winner (callers verify via ``repro.checks``
+        *before* putting — the store holds only vetted schedules)."""
+        with self._lock:
+            self._schedules.setdefault(signature, {})[config_key] = dict(record)
+        if self.path is not None:
+            self.save(self.path)
+
     def save(self, path: str | None = None) -> str:
         path = path if path is not None else self.path
         if path is None:
             raise ValueError("CalibrationStore has no path; pass save(path)")
-        with self._lock:
-            payload = {"format": self._FORMAT, "entries": self._entries}
-            blob = json.dumps(payload, indent=1, sort_keys=True)
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
         # pid + thread id: concurrent savers (two executables calibrating
-        # on one runtime) must never truncate each other's tmp file; the
-        # io lock additionally orders the replaces so the newest snapshot
-        # wins rather than interleaving
+        # on one runtime) must never truncate each other's tmp file
         tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+        # snapshot *inside* the io lock: replace order then matches snapshot
+        # order, so the file on disk is always the newest state a saver saw
+        # (snapshotting outside would let a stale snapshot win the last
+        # replace under concurrent put()s)
         with self._io_lock:
+            with self._lock:
+                sigs = set(self._entries) | set(self._schedules)
+                entries = {
+                    sig: {
+                        "costs": self._entries.get(sig, {}),
+                        "schedule": self._schedules.get(sig, {}),
+                    }
+                    for sig in sigs
+                }
+                payload = {"format": self._FORMAT, "entries": entries}
+                blob = json.dumps(payload, indent=1, sort_keys=True)
             with open(tmp, "w") as f:
                 f.write(blob)
             os.replace(tmp, path)
         return path
 
     def load(self, path: str | None = None) -> int:
-        """Merge entries from ``path`` (disk wins); returns the entry count."""
+        """Merge entries from ``path`` (disk wins); returns the entry count.
+
+        Accepts the current format 2 and migrates format-1 files (costs
+        only — measured seconds are never lost to a format bump); any other
+        format raises a :class:`ValueError` naming the file.
+        """
         path = path if path is not None else self.path
         if path is None:
             raise ValueError("CalibrationStore has no path; pass load(path)")
         with open(path) as f:
             payload = json.load(f)
-        if payload.get("format") != self._FORMAT:
+        fmt = payload.get("format")
+        costs_in: dict[str, dict[str, float]] = {}
+        scheds_in: dict[str, dict[str, dict]] = {}
+        if fmt == 1:
+            # format 1: entries are bare {sig: {op: seconds}} cost tables
+            for sig, costs in payload["entries"].items():
+                costs_in[sig] = {k: float(v) for k, v in costs.items()}
+        elif fmt == self._FORMAT:
+            for sig, section in payload["entries"].items():
+                costs_in[sig] = {
+                    k: float(v) for k, v in section.get("costs", {}).items()
+                }
+                sch = section.get("schedule", {})
+                if sch:
+                    scheds_in[sig] = {ck: dict(rec) for ck, rec in sch.items()}
+        else:
             raise ValueError(
-                f"calibration store {path!r} has format "
-                f"{payload.get('format')!r}, expected {self._FORMAT}"
+                f"calibration store {path!r} has format {fmt!r}; this build "
+                f"reads formats 1 and {self._FORMAT}"
             )
-        entries = {
-            sig: {k: float(v) for k, v in costs.items()}
-            for sig, costs in payload["entries"].items()
-        }
         with self._lock:
-            self._entries.update(entries)
+            # a format-2 sig may be schedule-only: an empty costs section
+            # must not shadow (or fabricate) a measured table
+            self._entries.update({s: c for s, c in costs_in.items() if c})
+            for sig, by_cfg in scheds_in.items():
+                self._schedules.setdefault(sig, {}).update(by_cfg)
             return len(self._entries)
 
 

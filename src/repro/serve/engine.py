@@ -228,6 +228,7 @@ class ContinuousEngine(_SamplerMixin):
         pool: ExecutorPool | None = None,
         runtime: Runtime | None = None,
         decode_host_mode: str = "static",
+        schedule_search: str = "auto",
     ):
         if cfg.frontend:
             raise ValueError("continuous batching supports decoder-only archs "
@@ -255,12 +256,16 @@ class ContinuousEngine(_SamplerMixin):
         # prompt length and they share the step's executors with the
         # in-flight decode.
         tok_spec = jax.ShapeDtypeStruct((self.capacity, 1), jnp.int32)
+        # schedule_search="auto" (default): once the decode graph is
+        # calibrated below, the frozen decode plan is the simulator-searched
+        # min-makespan winner (persisted per graph signature), not bare CPF
         self._decode_exe = api.compile(
             make_decode_step(cfg), params, self.cache, tok_spec,
             hw=hw, backend="host", jit_nodes=True, host_mode=decode_host_mode,
-            pool=pool, runtime=self.runtime,
+            pool=pool, runtime=self.runtime, schedule_search=schedule_search,
             name=f"serve_decode[{cfg.name}]",
         )
+        self.schedule_search = schedule_search
         self.decode_host_mode = self._decode_exe.host_mode
         # profile-guided executor config for the serving graph: the §4.2
         # search over *measured* per-op costs (Executable.calibrate runs the
@@ -430,7 +435,7 @@ class ContinuousEngine(_SamplerMixin):
             exe = api.compile(
                 make_prefill_step(self.cfg), self.params, self._zero_sub_cache, tok_spec,
                 hw=self.hw, backend="host", pool=self.pool, runtime=self.runtime,
-                jit_nodes=True,
+                jit_nodes=True, schedule_search=self.schedule_search,
                 n_executors=self.n_executors, team_size=self._team_size,
                 name=f"serve_prefill[{self.cfg.name},S={bucket}]",
             )

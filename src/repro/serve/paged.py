@@ -261,6 +261,7 @@ class PagedEngine(_SamplerMixin):
         pool: ExecutorPool | None = None,
         runtime: Runtime | None = None,
         decode_host_mode: str = "static",
+        schedule_search: str = "auto",
     ):
         if not transformer.paged_supported(cfg):
             raise ValueError(
@@ -303,12 +304,17 @@ class PagedEngine(_SamplerMixin):
                       "table": jnp.full((self.capacity, self.n_pt), -1, jnp.int32),
                       "pages": self._pages}
         tok_spec = jax.ShapeDtypeStruct((self.capacity, 1), jnp.int32)
+        # schedule_search="auto": a calibrated decode graph freezes the
+        # simulator-searched winner (persisted per graph signature), not
+        # necessarily bare CPF — token streams are unchanged (same ops, same
+        # numerics; only placements move)
         self._decode_exe = api.compile(
             make_paged_decode_step(cfg, ps), params, cache_spec, tok_spec,
             hw=hw, backend="host", jit_nodes=True, host_mode=decode_host_mode,
-            pool=pool, runtime=self.runtime,
+            pool=pool, runtime=self.runtime, schedule_search=schedule_search,
             name=f"serve_paged_decode[{cfg.name}]",
         )
+        self.schedule_search = schedule_search
         self.decode_host_mode = self._decode_exe.host_mode
         if self._decode_exe.calibrated:
             kw = ({"max_executors": max_executors}
@@ -339,7 +345,7 @@ class PagedEngine(_SamplerMixin):
             {"tokens": jax.ShapeDtypeStruct((1, self.chunk), jnp.int32)},
             jnp.int32(0), jnp.int32(self.chunk),
             hw=hw, backend="host", jit_nodes=True,
-            pool=pool, runtime=self.runtime,
+            pool=pool, runtime=self.runtime, schedule_search=schedule_search,
             n_executors=self.n_executors, team_size=self._team_size,
             name=f"serve_paged_chunk[{cfg.name},T={self.chunk}]",
         )

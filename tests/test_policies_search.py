@@ -1,0 +1,435 @@
+"""Policy registry + simulator-guided schedule search (PR 8).
+
+Covers: the SchedulePolicy registry (registration rules, resolution,
+executor-assignment hook), deterministic tie-breaking in the simulator
+(equal-priority ops pop in stable node-id order — satellite 1 regression),
+core.search (winner <= CPF, CPF-preferring ties, S-rule verification),
+CalibrationStore format-2 schedule sections + format-1 migration, and the
+api schedule_search knob (auto/force semantics, store-hit replay without
+re-searching — the PR 5 monkeypatch pattern).
+"""
+import json
+import os
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checks import check_schedule
+from repro.core import (
+    KNL7250,
+    Graph,
+    OpNode,
+    PolicyContext,
+    SimConfig,
+    get_policy,
+    list_policies,
+    make_schedule,
+    register_policy,
+    search_schedule,
+    simulate,
+    unregister_policy,
+)
+from repro.core.policies import LevelPack, PerturbedCPF
+from repro.core.static_host import layered_graph
+from repro.runtime import CalibrationStore, Runtime
+
+FIXTURE_DIR = os.path.join(os.path.dirname(__file__), "data")
+
+
+def random_dag(seed: int, n: int = 18, tie_costs: bool = False) -> Graph:
+    """Deterministic random DAG; ``tie_costs`` gives every op identical
+    stats so priorities tie heavily (the tie-break stress case)."""
+    rng = random.Random(seed)
+    g = Graph(f"rand{seed}")
+    for i in range(n):
+        deps = []
+        if i:
+            k = rng.randint(0, min(i, 3))
+            deps = sorted({rng.randrange(i) for _ in range(k)})
+        g.add(OpNode(
+            f"op{i}",
+            kind=rng.choice(["gemm", "elementwise"]),
+            flops=1e6 if tie_costs else rng.uniform(1e4, 1e9),
+            bytes_in=1e4 if tie_costs else rng.uniform(1e3, 1e7),
+            bytes_out=1e3 if tie_costs else rng.uniform(1e3, 1e6),
+            deps=tuple(f"op{d}" for d in deps),
+        ))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_cpf_first_and_all_builtins():
+    names = list_policies()
+    assert names[0] == "cpf"
+    assert {"cpf", "level-pack", "lpt", "cpf-perturb"} <= set(names)
+
+
+def test_get_policy_unknown_name_lists_registered():
+    with pytest.raises(ValueError, match="cpf"):
+        get_policy("does-not-exist")
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        make_schedule(random_dag(0), KNL7250, n_executors=2, team_size=8,
+                      policy="does-not-exist")
+
+
+def test_register_rejects_duplicates_naive_names_and_non_policies():
+    with pytest.raises(ValueError, match="already registered"):
+        register_policy(LevelPack())
+
+    class Fifo:
+        name = "fifo"
+        randomized = False
+
+        def priorities(self, ctx):
+            return {}
+
+        def assign_executor(self, ctx, op, free):
+            return None
+
+    with pytest.raises(ValueError, match="reserved"):
+        register_policy(Fifo())
+    with pytest.raises(TypeError):
+        register_policy(object())
+
+
+def test_register_replace_and_unregister_roundtrip():
+    class Custom:
+        name = "test-custom"
+        randomized = False
+
+        def priorities(self, ctx):
+            return {n: 0.0 for n in ctx.graph.names}
+
+        def assign_executor(self, ctx, op, free):
+            return None
+
+    try:
+        register_policy(Custom())
+        assert "test-custom" in list_policies()
+        register_policy(Custom(), replace=True)   # shadowing is explicit
+    finally:
+        unregister_policy("test-custom")
+    assert "test-custom" not in list_policies()
+
+
+def test_adhoc_policy_instance_passes_through_without_registration():
+    class Reversed:
+        name = "reversed-ids"
+        randomized = False
+
+        def priorities(self, ctx):
+            return {n: float(i) for i, n in enumerate(ctx.graph.names)}
+
+        def assign_executor(self, ctx, op, free):
+            return None
+
+    g = random_dag(3)
+    sched = make_schedule(g, KNL7250, n_executors=3, team_size=8,
+                          policy=Reversed())
+    sched.validate(g)
+    assert sched.policy == "reversed-ids"
+
+
+def test_perturbed_cpf_validates_epsilon():
+    with pytest.raises(ValueError, match="epsilon"):
+        PerturbedCPF(epsilon=1.5)
+
+
+# ---------------------------------------------------------------------------
+# assignment hook + determinism (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_level_pack_hook_steers_ops_to_wave_positions():
+    # two independent chains: a0->a1->a2, b0->b1->b2.  Wave position pins
+    # chain a to executor 0 and chain b to executor 1 throughout.
+    g = Graph("chains")
+    for c in ("a", "b"):
+        for i in range(3):
+            g.add(OpNode(f"{c}{i}", kind="gemm", flops=1e6, bytes_in=1e3,
+                         bytes_out=1e3,
+                         deps=(f"{c}{i - 1}",) if i else ()))
+    sched = make_schedule(g, KNL7250, n_executors=2, team_size=8,
+                          policy="level-pack")
+    execs_a = {sched.placements[f"a{i}"][0] for i in range(3)}
+    execs_b = {sched.placements[f"b{i}"][0] for i in range(3)}
+    assert len(execs_a) == 1 and len(execs_b) == 1
+    assert execs_a != execs_b
+
+
+def test_assignment_hook_none_keeps_default_placement():
+    g = random_dag(5)
+    a = make_schedule(g, KNL7250, n_executors=3, team_size=8, policy="cpf")
+    ctx_free: list = []
+
+    class Passive:
+        name = "passive"
+        randomized = False
+
+        def priorities(self, ctx):
+            return ctx.levels
+
+        def assign_executor(self, ctx, op, free):
+            ctx_free.append(free)
+            return None
+
+    b = make_schedule(g, KNL7250, n_executors=3, team_size=8, policy=Passive())
+    assert a.placements == b.placements   # None defers to engine placement
+    assert ctx_free and all(f == tuple(sorted(f)) for f in ctx_free)
+
+
+@pytest.mark.parametrize("policy", ["cpf", "level-pack", "lpt", "cpf-perturb"])
+def test_simulation_start_order_is_reproducible(policy):
+    """Satellite 1: equal-priority ready ops pop in stable node-id order —
+    two simulations of one graph give identical traces."""
+    g = random_dag(11, tie_costs=True)   # identical costs => heavy ties
+    cfg = SimConfig(n_executors=4, team_size=8, policy=policy)
+    a = simulate(g, KNL7250, cfg, seed=7)
+    b = simulate(g, KNL7250, cfg, seed=7)
+    assert a.start_order() == b.start_order()
+    assert [(e.op, e.executor, e.start) for e in a.trace] == \
+           [(e.op, e.executor, e.start) for e in b.trace]
+
+
+def test_perturbed_cpf_replays_by_seed():
+    g = random_dag(13)
+    mk = lambda seed: make_schedule(g, KNL7250, n_executors=4, team_size=8,
+                                    policy="cpf-perturb", seed=seed)
+    assert mk(3).placements == mk(3).placements
+    assert mk(3).seed == 3
+    # different seeds draw different priorities (the restart mechanism);
+    # makespans may coincide but the noise sequences must not be identical
+    ctx = PolicyContext(graph=g, costs={n: 1.0 for n in g.names},
+                        levels={n: 1.0 for n in g.names}, depths={},
+                        n_executors=4, seed=0)
+    ctx2 = PolicyContext(graph=g, costs=ctx.costs, levels=ctx.levels,
+                         depths={}, n_executors=4, seed=1)
+    pol = get_policy("cpf-perturb")
+    assert pol.priorities(ctx) != pol.priorities(ctx2)
+
+
+# ---------------------------------------------------------------------------
+# search
+# ---------------------------------------------------------------------------
+
+def test_search_winner_never_worse_than_cpf_and_covers_all_policies():
+    for seed in range(6):
+        g = random_dag(seed)
+        res = search_schedule(g, KNL7250, n_executors=4, team_size=8)
+        assert res.makespan_sim <= res.cpf_makespan + 1e-12
+        assert res.runner_up_gap >= 0.0
+        assert set(res.by_policy()) == set(list_policies())
+        assert res.record() == {
+            "policy": res.policy, "seed": res.seed,
+            "makespan_sim": res.makespan_sim,
+            "runner_up_gap": res.runner_up_gap,
+        }
+        # the winner replays exactly from its (policy, seed) record
+        replay = make_schedule(g, KNL7250, n_executors=4, team_size=8,
+                               policy=res.policy, seed=res.seed)
+        assert replay.placements == res.schedule.placements
+
+
+def test_search_ties_prefer_cpf():
+    # a pure chain: every policy produces the same (only) schedule, so the
+    # tie must resolve to the first candidate — CPF
+    g = Graph("chain")
+    for i in range(5):
+        g.add(OpNode(f"c{i}", kind="gemm", flops=1e6, bytes_in=1e3,
+                     bytes_out=1e3, deps=(f"c{i - 1}",) if i else ()))
+    res = search_schedule(g, KNL7250, n_executors=2, team_size=8)
+    assert res.policy == "cpf"
+    assert res.runner_up_gap == 0.0
+
+
+def test_search_winner_passes_schedule_rules():
+    for seed in (1, 4, 9):
+        g = random_dag(seed)
+        res = search_schedule(g, KNL7250, n_executors=3, team_size=8)
+        rep = check_schedule(res.schedule, g)
+        assert rep.ok, rep.render()
+
+
+def test_search_respects_restricted_candidates_and_restarts():
+    g = random_dag(2)
+    res = search_schedule(g, KNL7250, n_executors=4, team_size=8,
+                          policies=["lpt"], n_restarts=1)
+    assert res.policy == "lpt"
+    assert len(res.candidates) == 1
+    res2 = search_schedule(g, KNL7250, n_executors=4, team_size=8,
+                           policies=["cpf-perturb"], n_restarts=5)
+    assert len(res2.candidates) == 5
+    assert [c.seed for c in res2.candidates] == [0, 1, 2, 3, 4]
+    with pytest.raises(ValueError, match="n_restarts"):
+        search_schedule(g, KNL7250, n_executors=4, team_size=8, n_restarts=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 6))
+def test_property_every_policy_feasible_and_winner_beats_cpf(seed, n_exec):
+    """Satellite 3: on random DAGs every registered policy's schedule passes
+    the repro.checks S-rules, and the searched winner <= CPF."""
+    g = random_dag(seed)
+    for name in list_policies():
+        sched = make_schedule(g, KNL7250, n_executors=n_exec, team_size=8,
+                              policy=name)
+        rep = check_schedule(sched, g)
+        assert rep.ok, f"{name}: {rep.render()}"
+    res = search_schedule(g, KNL7250, n_executors=n_exec, team_size=8,
+                          n_restarts=3)
+    assert res.makespan_sim <= res.cpf_makespan + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# store format 2 (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_store_loads_checked_in_format1_fixture(tmp_path):
+    fixture = os.path.join(FIXTURE_DIR, "calibration_format1.json")
+    store = CalibrationStore()    # no path: the checked-in fixture stays 1
+    store.load(fixture)
+    sig = "1111aaaa2222bbbb3333cccc4444dddd5555eeee6666ffff7777000088889999"
+    assert store.get(sig) == {"l0w0": 0.00013, "l0w1": 0.00027, "out": 4.2e-05}
+    assert len(store) == 2
+    # round trip: rewrite as format 2, costs intact, schedules now storable
+    out = str(tmp_path / "migrated.json")
+    store.put_schedule(sig, "4x8|analytic",
+                       {"policy": "lpt", "seed": 0, "makespan_sim": 1e-3,
+                        "runner_up_gap": 0.02})
+    store.save(out)
+    payload = json.loads(open(out).read())
+    assert payload["format"] == 2
+    fresh = CalibrationStore(out)
+    assert fresh.get(sig) == store.get(sig)
+    assert fresh.get_schedule(sig, "4x8|analytic")["policy"] == "lpt"
+
+
+def test_store_schedule_sections_round_trip(tmp_path):
+    path = str(tmp_path / "cal.json")
+    store = CalibrationStore(path)
+    store.put("sig-x", {"op": 1e-3})
+    rec = {"policy": "cpf-perturb", "seed": 4,
+           "makespan_sim": 2.5e-4, "runner_up_gap": 0.01}
+    store.put_schedule("sig-x", "8x4|deadbeef00112233", rec)
+    store.put_schedule("sig-y", "2x2|analytic", {"policy": "cpf", "seed": 0,
+                                                 "makespan_sim": 1.0,
+                                                 "runner_up_gap": 0.0})
+    fresh = CalibrationStore(path)
+    assert fresh.get_schedule("sig-x", "8x4|deadbeef00112233") == rec
+    assert fresh.get_schedule("sig-x", "other-config") is None
+    assert fresh.get_schedule("sig-y", "2x2|analytic")["policy"] == "cpf"
+    # schedule-only signatures don't fabricate cost tables
+    assert fresh.get("sig-y") is None
+    assert fresh.get("sig-x") == {"op": 1e-3}
+
+
+def test_store_unknown_future_format_names_the_file(tmp_path):
+    p = tmp_path / "future.json"
+    p.write_text(json.dumps({"format": 3, "entries": {}}))
+    with pytest.raises(ValueError, match="future.json"):
+        CalibrationStore(str(p))
+
+
+# ---------------------------------------------------------------------------
+# api knob + store-hit replay (acceptance criterion 4)
+# ---------------------------------------------------------------------------
+
+def test_schedule_search_knob_validated():
+    with Runtime(n_workers=2) as rt:
+        with pytest.raises(ValueError, match="schedule_search"):
+            rt.compile(layered_graph(3, 2), backend="sim",
+                       schedule_search="bogus")
+
+
+def test_auto_searches_only_once_calibrated(monkeypatch):
+    g = layered_graph(3, 2)
+    with Runtime(n_workers=2) as rt:
+        exe = rt.compile(g, backend="sim", n_executors=2, team_size=4)
+        # analytic costs, auto mode: no search
+        monkeypatch.setattr(
+            "repro.api.search_schedule",
+            lambda *a, **k: pytest.fail("searched on analytic costs"))
+        assert not exe.search_active
+        assert exe.schedule.policy == "cpf"
+        monkeypatch.undo()
+        # a measured table flips auto on
+        costs = dict(exe.schedule.op_costs)
+        exe.profile_with(measured_costs=lambda _team: costs)
+        assert exe.search_active
+        sched = exe.schedule
+        assert sched.policy in list_policies()
+        assert "schedule search: winner=" in exe.describe()
+
+
+def test_off_never_searches_force_always_does(monkeypatch):
+    g = layered_graph(3, 2)
+    with Runtime(n_workers=2) as rt:
+        exe = rt.compile(g, backend="sim", n_executors=2, team_size=4,
+                         schedule_search="off")
+        costs = dict(exe.schedule.op_costs)
+        exe.profile_with(measured_costs=lambda _team: costs)
+        monkeypatch.setattr(
+            "repro.api.search_schedule",
+            lambda *a, **k: pytest.fail("schedule_search='off' searched"))
+        assert exe.schedule.policy == "cpf"
+        monkeypatch.undo()
+        exe2 = rt.compile(g, backend="sim", n_executors=2, team_size=4,
+                          schedule_search="force")
+        called = []
+        real = search_schedule
+        monkeypatch.setattr(
+            "repro.api.search_schedule",
+            lambda *a, **k: called.append(1) or real(*a, **k))
+        exe2.schedule
+        assert called   # force searches even on analytic costs
+
+
+def test_second_compile_replays_stored_winner_without_search(tmp_path, monkeypatch):
+    """Acceptance: a second compile() of the same graph signature replays
+    the persisted winner without re-running the search (PR 5 pattern)."""
+    g = layered_graph(4, 3)
+    path = str(tmp_path / "cal.json")
+    with Runtime(n_workers=2, calibration_path=path) as rt1:
+        exe = rt1.compile(layered_graph(4, 3), backend="sim",
+                          n_executors=3, team_size=4, schedule_search="force")
+        sched1 = exe.schedule
+        placements = dict(sched1.placements)
+        assert exe._search is not None          # a live search ran
+
+    monkeypatch.setattr(
+        "repro.api.search_schedule",
+        lambda *a, **k: pytest.fail("second compile re-ran the search"))
+    with Runtime(n_workers=2, calibration_path=path) as rt2:
+        exe2 = rt2.compile(layered_graph(4, 3), backend="sim",
+                           n_executors=3, team_size=4, schedule_search="force")
+        sched2 = exe2.schedule                  # replayed from the store
+        assert exe2._search is None
+        assert exe2._search_hit is not None
+        assert sched2.policy == sched1.policy
+        assert sched2.seed == sched1.seed
+        assert dict(sched2.placements) == placements
+        assert "replayed from store" in exe2.describe()
+
+
+def test_stored_winner_with_unknown_policy_falls_back_to_search(tmp_path):
+    g = layered_graph(3, 2)
+    path = str(tmp_path / "cal.json")
+    with Runtime(n_workers=2, calibration_path=path) as rt:
+        exe = rt.compile(g, backend="sim", n_executors=2, team_size=4,
+                         schedule_search="force")
+        exe.schedule
+        sig = exe.signature
+        ck = next(iter(rt.calibration._schedules[sig]))
+        rt.calibration.put_schedule(
+            sig, ck, {"policy": "retired-policy", "seed": 0,
+                      "makespan_sim": 1.0, "runner_up_gap": 0.0})
+    with Runtime(n_workers=2, calibration_path=path) as rt2:
+        exe2 = rt2.compile(g, backend="sim", n_executors=2, team_size=4,
+                           schedule_search="force")
+        sched = exe2.schedule                   # re-searched, not an error
+        assert sched.policy in list_policies()
+        assert exe2._search is not None
