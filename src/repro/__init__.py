@@ -24,6 +24,13 @@ _EXPORTS = {
     "CalibrationStore": "repro.runtime",
     "ExecutorLease": "repro.runtime",
     "graph_signature": "repro.runtime",
+    "AdmissionRejected": "repro.runtime",
+    "DeadlineExceeded": "repro.core.engine",
+    # the multi-replica serving fleet (supervised worker processes)
+    "Fleet": "repro.fleet.supervisor",
+    "FleetConfig": "repro.fleet.supervisor",
+    "FleetRequest": "repro.fleet.supervisor",
+    "FaultSpec": "repro.fleet.faults",
     # capture + graph IR
     "capture": "repro.core.capture",
     "CapturedGraph": "repro.core.capture",

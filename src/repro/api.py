@@ -43,7 +43,8 @@ from typing import Any, Mapping
 
 from repro.core.capture import CapturedGraph, capture
 from repro.core.cost_model import KNL7250, HardwareModel, sequential_makespan
-from repro.core.engine import ExecutorPool, HostRunResult, HostScheduler
+from repro.core.engine import (DeadlineExceeded, ExecutorPool, HostRunResult,
+                               HostScheduler)
 from repro.core.graph import Graph
 from repro.core.profiler import ProfileResult, measure_op_costs, profile
 from repro.core.scheduler import Schedule, make_schedule, slot_assignment
@@ -563,6 +564,7 @@ class Executable:
         host_mode: str | None = None,
         plan: StaticHostPlan | None = None,
         collect_trace: bool = False,
+        deadline: float | None = None,
     ) -> HostRunResult:
         """Run the host runtime on a name→value input mapping.
 
@@ -582,6 +584,14 @@ class Executable:
         paper-faithful centralized scheduler.  An explicit ``plan`` forces
         static execution of exactly that plan.  ``collect_trace`` turns on
         per-op timestamps for static runs (dynamic runs always trace).
+
+        ``deadline`` (absolute, ``time.monotonic``) bounds the whole run —
+        the lease wait *and* execution.  On expiry the run raises
+        :class:`~repro.core.engine.DeadlineExceeded` and its lease is
+        released with the still-busy executors **quarantined** (their
+        threads are stuck inside the abandoned op; admission returns them
+        to service when the op finally finishes) so a hung op degrades
+        capacity instead of wedging the pool.
         """
         pool = pool if pool is not None else self.pool
         mode = host_mode if host_mode is not None else self.host_mode
@@ -615,10 +625,12 @@ class Executable:
                             f"runtime has {rt.n_workers}; recompile the plan "
                             "for the runtime width or pass an explicit pool"
                         )
-                    lease = rt.lease(plan.n_executors, prefer=self._lease_ids)
+                    lease = rt.lease(plan.n_executors, prefer=self._lease_ids,
+                                     deadline=deadline)
                     self._lease_ids = lease.executor_ids
                     pool = lease
-                res = plan.run(inputs, pool=pool, collect_trace=collect_trace)
+                res = plan.run(inputs, pool=pool, collect_trace=collect_trace,
+                               deadline=deadline)
                 self.last_run = res
                 return res
             n = self._host_executors(n_executors)
@@ -628,12 +640,20 @@ class Executable:
                 n = min(n, rt.n_workers)
             host = self._host_scheduler(n)
             if pool is None:
-                lease = rt.lease(n, prefer=self._lease_ids)
+                lease = rt.lease(n, prefer=self._lease_ids, deadline=deadline)
                 self._lease_ids = lease.executor_ids
                 pool = lease
-            res = host.run(inputs, pool=pool)
+            res = host.run(inputs, pool=pool, deadline=deadline)
             self.last_run = res
             return res
+        except DeadlineExceeded:
+            if lease is not None:
+                # the abandoned op still owns its executor thread: releasing
+                # it into the free set would hand the next run a busy
+                # executor — quarantine it until the op finally returns
+                lease.release(quarantine_busy=True)
+                lease = None
+            raise
         finally:
             if lease is not None:
                 lease.release()

@@ -7,7 +7,7 @@ the latest restorable step (the fault-injection test kills saves midway).
 
 Mesh-agnostic restore: leaves are stored as full (unsharded) numpy arrays,
 so a run restarted on a *different* mesh/devices count just device_puts each
-leaf with the new sharding — elastic re-scaling (DESIGN.md §8).  On a real
+leaf with the new sharding — elastic re-scaling (DESIGN.md §9).  On a real
 multi-host pod the same layout is written per-process for the process's
 addressable shards; this box has one process, so full arrays are exact.
 

@@ -20,7 +20,9 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import logging
 import queue
+import sys
 import threading
 import time
 from dataclasses import dataclass
@@ -30,9 +32,21 @@ from typing import Any, Callable, Mapping
 from .graph import Graph
 from .simulate import TraceEvent
 
-__all__ = ["ExecutorPool", "HostScheduler", "HostRunResult"]
+__all__ = ["DeadlineExceeded", "ExecutorPool", "HostScheduler", "HostRunResult"]
 
 _ERR = object()   # triggered-queue sentinel: an executor relayed an exception
+
+_log = logging.getLogger(__name__)
+
+
+class DeadlineExceeded(TimeoutError):
+    """A host run overshot its deadline with ops still in flight.
+
+    The run abandons its results and frees its executor lease; the op(s)
+    that wedged keep their executor threads busy until they return (Python
+    threads cannot be killed), which is why callers holding a lease
+    quarantine the still-busy executors instead of handing them to the next
+    run (``repro.runtime._Admission.quarantine``)."""
 
 
 class ExecutorPool:
@@ -63,6 +77,13 @@ class ExecutorPool:
         # batches land FIFO-consistently (no cross-plan deadlock) instead of
         # assuming the lock above works
         self.segment_log: list[tuple[int, int, str]] | None = None
+        # per-executor (task name, started_at monotonic) while an op runs,
+        # None when idle: the liveness signal deadline aborts and the stuck-
+        # close diagnostic read to name *which* op wedged *which* executor
+        self._current: list[tuple[str, float] | None] = [None] * n_executors
+        # executors whose threads outlived close(): a nonempty tuple marks
+        # the pool unhealthy — its threads are stuck inside an op
+        self.stuck_executors: tuple[tuple[int, str], ...] = ()
         self._closed = False
         self._threads = [
             threading.Thread(target=self._worker, args=(e,), daemon=True,
@@ -111,7 +132,14 @@ class ExecutorPool:
         """Approximate queued depth on one executor (cross-run load signal)."""
         return self._buffers[ex].qsize()
 
-    def close(self) -> None:
+    def current_tasks(self) -> list[tuple[str, float] | None]:
+        """Snapshot of what each executor is running *right now*:
+        ``(op name, started_at)`` per executor, ``None`` when idle.  The
+        liveness probe behind deadline aborts, executor quarantine, and the
+        stuck-close diagnostic."""
+        return list(self._current)
+
+    def close(self, timeout: float = 5.0, *, raise_on_stuck: bool = True) -> None:
         """Shut the executor threads down. Idempotent and segment-safe:
 
         * the shutdown sentinels go in under the segment lock, so they can
@@ -123,6 +151,15 @@ class ExecutorPool:
           whatever threads remain;
         * closing from an executor thread itself (an op that tears its own
           pool down) skips the self-join instead of raising.
+
+        A thread that outlives its ``timeout``-second join is **stuck inside
+        an op**: the pool records it in :attr:`stuck_executors` (with the
+        op's name), logs the diagnostic, and raises ``RuntimeError`` —
+        returning silently would let the caller believe every executor
+        exited when one is still holding a thread (and whatever memory its
+        task closed over).  ``raise_on_stuck=False`` keeps the record and
+        the log but suppresses the raise, for close calls already on an
+        exception path that must not be masked.
         """
         with self._segment_lock:
             if not self._closed:
@@ -130,9 +167,26 @@ class ExecutorPool:
                 for b in self._buffers:
                     b.put(None)
         me = threading.current_thread()
-        for t in self._threads:
-            if t is not me:
-                t.join(timeout=5)
+        deadline = time.monotonic() + timeout
+        stuck: list[tuple[int, str]] = []
+        for e, t in enumerate(self._threads):
+            if t is me:
+                continue
+            t.join(timeout=max(0.0, deadline - time.monotonic()))
+            if t.is_alive():
+                cur = self._current[e]
+                stuck.append((e, cur[0] if cur else "<between ops>"))
+        if stuck:
+            self.stuck_executors = tuple(stuck)
+            detail = ", ".join(f"executor {e} in op {nm!r}" for e, nm in stuck)
+            _log.warning(
+                "ExecutorPool.close: %d executor thread(s) still running "
+                "after %.1fs — %s; pool is unhealthy", len(stuck), timeout,
+                detail)
+            if raise_on_stuck:
+                raise RuntimeError(
+                    f"ExecutorPool.close: {len(stuck)} executor thread(s) "
+                    f"stuck after {timeout:.1f}s ({detail})")
 
     def __enter__(self) -> "ExecutorPool":
         return self
@@ -146,14 +200,17 @@ class ExecutorPool:
             if item is None:
                 return
             name, task, reply, t_origin = item
+            self._current[ex] = (name, time.monotonic())
             t0 = time.perf_counter() - t_origin
             try:
                 out = task()
             except BaseException as e:  # noqa: BLE001 — relayed to the run
+                self._current[ex] = None
                 reply.put((_ERR, e, ex, name, 0.0))
                 del item, task
                 continue
             t1 = time.perf_counter() - t_origin
+            self._current[ex] = None
             reply.put((name, out, ex, t0, t1))
             # an idle executor must not pin its last task (a static-plan
             # segment closes over the whole plan -> graph) or result arrays
@@ -225,6 +282,7 @@ class HostScheduler:
         inputs: Mapping[str, Any] | None = None,
         *,
         pool: Any = None,
+        deadline: float | None = None,
     ) -> HostRunResult:
         g = self.graph
         if g.version != self._graph_version:
@@ -323,7 +381,25 @@ class HostScheduler:
                 # poll triggered operations (Alg. 1 line 2); drain every
                 # completion that has already arrived so one dispatch round
                 # can refill all newly-idle executors
-                completed = [triggered.get()]
+                if deadline is None:
+                    first = triggered.get()
+                else:
+                    # a per-run deadline bounds each wait: a hung op must
+                    # poison this run (freeing its lease) instead of wedging
+                    # the scheduler — and the pool behind it — forever
+                    try:
+                        first = triggered.get(
+                            timeout=max(0.0, deadline - time.monotonic()))
+                    except queue.Empty:
+                        busy = ""
+                        if hasattr(pool, "current_tasks"):
+                            cur = [c[0] for c in pool.current_tasks() if c]
+                            busy = f"; executors busy in {cur!r}" if cur else ""
+                        raise DeadlineExceeded(
+                            f"graph {g.name!r}: deadline exceeded with "
+                            f"{total - n_done} of {total} ops unfinished"
+                            f"{busy}") from None
+                completed = [first]
                 while True:
                     try:
                         completed.append(triggered.get_nowait())
@@ -347,7 +423,10 @@ class HostScheduler:
                 dispatch()
         finally:
             if ephemeral:
-                pool.close()
+                # on an exception path (op failure, deadline) the close must
+                # not mask the in-flight error with a stuck-thread raise —
+                # the unhealthy state is still recorded and logged
+                pool.close(raise_on_stuck=sys.exc_info()[0] is None)
 
         makespan = max((e.end for e in trace), default=0.0)
         return HostRunResult(

@@ -38,13 +38,14 @@ from __future__ import annotations
 
 import itertools
 import queue
+import sys
 import time
 from dataclasses import dataclass
 from functools import partial
 from threading import Lock
 from typing import Any, Callable, Mapping
 
-from .engine import _ERR, ExecutorPool, HostRunResult
+from .engine import _ERR, DeadlineExceeded, ExecutorPool, HostRunResult
 from .graph import Graph, GraphValidationError
 from .scheduler import Schedule
 from .simulate import TraceEvent
@@ -200,6 +201,7 @@ class StaticHostPlan:
         pool: ExecutorPool | None = None,
         *,
         collect_trace: bool = False,
+        deadline: float | None = None,
     ) -> HostRunResult:
         """Execute the plan; returns the same :class:`HostRunResult` shape as
         the dynamic runtime (``trace`` is empty unless ``collect_trace`` —
@@ -208,6 +210,12 @@ class StaticHostPlan:
         Without a ``pool`` an ephemeral one is spun up for the run; with one,
         segments are queued atomically behind whatever the pool is already
         running (dynamic ops or another plan's segments).
+
+        ``deadline`` (absolute, ``time.monotonic``) bounds the wait for
+        segment completion: on expiry every ready queue is poisoned — idle
+        segments exit — and :class:`~repro.core.engine.DeadlineExceeded`
+        is raised naming whatever ops are still on executor threads, so a
+        hung op frees this run's lease instead of wedging it forever.
         """
         inputs = inputs or {}
         if self.graph.version != self.graph_version:
@@ -257,7 +265,26 @@ class StaticHostPlan:
             )
             seg_err: tuple[Any, int] | None = None
             for _ in active:
-                msg = reply.get()
+                if deadline is None:
+                    msg = reply.get()
+                else:
+                    try:
+                        msg = reply.get(
+                            timeout=max(0.0, deadline - time.monotonic()))
+                    except queue.Empty:
+                        # poison first: segments blocked on their ready
+                        # queue exit immediately and give their executor
+                        # back; only the executor actually inside the hung
+                        # op stays busy (the caller quarantines it)
+                        for q in state.ready:
+                            q.put(_POISON)
+                        busy = ""
+                        if hasattr(pool, "current_tasks"):
+                            cur = [c[0] for c in pool.current_tasks() if c]
+                            busy = f"; executors busy in {cur!r}" if cur else ""
+                        raise DeadlineExceeded(
+                            f"plan {self.graph.name!r}: deadline exceeded "
+                            f"with segments unfinished{busy}") from None
                 if msg[0] is _ERR and seg_err is None:  # pragma: no cover
                     # segment infrastructure died outside the per-op try:
                     # poison the siblings (they may be blocked waiting for
@@ -268,7 +295,7 @@ class StaticHostPlan:
                         q.put(_POISON)
         finally:
             if ephemeral:
-                pool.close()
+                pool.close(raise_on_stuck=sys.exc_info()[0] is None)
         if seg_err is not None:  # pragma: no cover — segment infra only
             raise RuntimeError(
                 f"plan segment died on executor {seg_err[1]}") from seg_err[0]

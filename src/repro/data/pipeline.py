@@ -12,12 +12,15 @@ memorized to zero loss.
 """
 from __future__ import annotations
 
+import logging
 import queue
 import threading
 from dataclasses import dataclass
 from typing import Iterator
 
 import numpy as np
+
+_log = logging.getLogger(__name__)
 
 IGNORE = -1
 
@@ -100,20 +103,24 @@ class Prefetcher:
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._next_to_produce = start_step
         self._stop = threading.Event()
+        self._stage = "starting"      # what the producer is doing right now
         self._thread = threading.Thread(target=self._producer, daemon=True)
         self._thread.start()
 
     def _producer(self) -> None:
         while not self._stop.is_set():
             step = self._next_to_produce
+            self._stage = f"generate(step={step})"
             batch = self.source.batch(step)
             self._next_to_produce = step + 1
+            self._stage = f"enqueue(step={step})"
             while not self._stop.is_set():
                 try:
                     self._q.put((step, batch), timeout=0.1)
                     break
                 except queue.Full:
                     continue
+        self._stage = "stopped"
 
     def get(self, step: int) -> dict[str, np.ndarray]:
         while True:
@@ -127,14 +134,23 @@ class Prefetcher:
                 return self.source.batch(step)
             # s < step: stale entry (skipped ahead) — drop and keep draining
 
-    def close(self) -> None:
+    def close(self, timeout: float = 2.0) -> None:
+        """Stop the producer and join it.  A producer that fails to exit
+        within ``timeout`` (e.g. a wedged generator) is abandoned — it is a
+        daemon thread — but close names the stage it is stuck in rather than
+        returning silently, so leaks are attributable."""
         self._stop.set()
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
-        self._thread.join(timeout=2)
+        self._thread.join(timeout=timeout)
+        if self._thread.is_alive():
+            _log.warning(
+                "Prefetcher.close: producer thread did not exit within "
+                "%.1fs — stuck in %s; abandoning daemon thread",
+                timeout, self._stage)
 
 
 def make_pipeline(cfg: DataConfig, start_step: int = 0, prefetch: int = 2):

@@ -89,6 +89,87 @@ def drive(engine, arrivals: list[tuple[float, Request]], *, continuous: bool):
     return done, lat, time.perf_counter() - t0
 
 
+def serve_fleet(args) -> int:
+    """``--replicas N``: the supervised multi-replica tier.
+
+    Spawns N worker processes under a :class:`repro.fleet.Fleet` —
+    heartbeat liveness, crash/wedge failover with bit-exact replay, prefix-
+    affinity routing — and drives the same Poisson workload through it.
+    Workers default to real engines of the requested kind (sharing one JSON
+    calibration store so replica 2..N skip the schedule search);
+    ``--replica-engine toy`` swaps in the deterministic service-time worker
+    the fleet tests/bench use.
+    """
+    import numpy as np
+
+    from repro.fleet import Fleet, FleetConfig
+
+    kind = args.replica_engine
+    if kind == "auto":
+        kind = "paged" if args.paged else "continuous"
+    if kind == "toy":
+        vocab = 256
+        engine = {"kind": "toy", "vocab_size": vocab, "service_time_s": 0.004}
+    else:
+        cfg = get_config(args.arch, smoke=args.smoke)
+        vocab = cfg.vocab_size
+        engine = {"kind": kind, "arch": args.arch, "smoke": args.smoke,
+                  "max_batch": args.max_batch,
+                  "max_len": max(int(x) for x in
+                                 str(args.prompt_len).split(",")) + args.max_new + 1,
+                  "calibration_store": args.calibration_store}
+    prompt_lens = [int(x) for x in str(args.prompt_len).split(",")]
+    rng = np.random.default_rng(0)
+    t, work = 0.0, []
+    for i in range(args.requests):
+        if args.arrival_rate > 0:
+            t += float(rng.exponential(1.0 / args.arrival_rate))
+        prompt = [int(x) for x in rng.integers(
+            1, vocab, size=prompt_lens[i % len(prompt_lens)])]
+        work.append((t, prompt, args.max_new))
+
+    # real engines jit-compile their prefill/decode graphs on the *first*
+    # steps after ready, and heartbeats ride the serve loop — the liveness
+    # window must cover a compile-length step or the supervisor declares
+    # every healthy replica wedged and burns the restart budget
+    if kind == "toy":
+        fcfg = FleetConfig(n_workers=args.replicas, engine=engine,
+                           max_inflight_per_worker=args.max_batch)
+    else:
+        fcfg = FleetConfig(n_workers=args.replicas, engine=engine,
+                           max_inflight_per_worker=args.max_batch,
+                           heartbeat_s=0.5, liveness_s=120.0,
+                           startup_grace_s=600.0)
+    with Fleet(fcfg) as fleet:
+        fleet.wait_ready()
+        t0 = time.perf_counter()
+        todo, arrive, finish = list(work), {}, {}
+        while todo or fleet.has_work:
+            now = time.perf_counter() - t0
+            while todo and todo[0][0] <= now:
+                at, prompt, max_new = todo.pop(0)
+                arrive[fleet.submit(prompt, max_new)] = at
+            fleet.pump()
+            for req in fleet.completed:
+                finish.setdefault(req.rid, time.perf_counter() - t0)
+        done = sorted(fleet.completed, key=lambda r: r._order)
+        wall = time.perf_counter() - t0
+        stats = fleet.stats()
+    n_tokens = sum(len(r.tokens) for r in done)
+    lat = [finish[r.rid] - arrive[r.rid] for r in done]
+    print(f"[fleet:{kind} x{args.replicas}] served {len(done)} requests, "
+          f"{n_tokens} tokens in {wall:.2f}s ({n_tokens / wall:.1f} tok/s); "
+          f"latency p50={percentile(lat, 0.5) * 1e3:.0f}ms "
+          f"p95={percentile(lat, 0.95) * 1e3:.0f}ms")
+    print(f"  failovers={stats['n_failovers']} requeued={stats['n_requeued']} "
+          f"affinity_hits={stats['router_affinity_hits']}/"
+          f"{stats['router_routed']}")
+    bad = [t for r in done for t in r.tokens if t >= vocab]
+    if bad:
+        raise SystemExit(f"emitted out-of-vocab ids: {bad[:5]}")
+    return 0
+
+
 def main() -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", required=True)
@@ -145,7 +226,19 @@ def main() -> int:
                         "'basic' reports, 'strict' additionally refuses to "
                         "serve on error findings (continuous/paged only)")
     p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--replicas", type=int, default=1,
+                   help="serve through a supervised multi-replica fleet "
+                        "(worker processes, heartbeat failover, bit-exact "
+                        "requeue) instead of one in-process engine")
+    p.add_argument("--replica-engine", choices=("auto", "toy", "continuous",
+                                                "paged"), default="auto",
+                   help="fleet worker engine (--replicas > 1): 'auto' "
+                        "follows --paged/--continuous, 'toy' is the "
+                        "deterministic service-time worker")
     args = p.parse_args()
+
+    if args.replicas > 1:
+        return serve_fleet(args)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = transformer.init_params(cfg, jax.random.key(0))

@@ -308,7 +308,7 @@ def forward(cfg: ModelConfig, params, batch: dict, *, remat: bool = False):
     kinds = cfg.layer_kinds()
     # residual stream: batch over DP axes, sequence over the model axis when
     # sequence-parallel activations are enabled (Megatron-SP; saves the remat
-    # carries — see DESIGN.md §8). Dropped automatically when S % tp != 0.
+    # carries — see DESIGN.md §9). Dropped automatically when S % tp != 0.
     x = shard(x, "batch", "seq", None)
 
     if cfg.scan_layers and cfg.is_homogeneous:

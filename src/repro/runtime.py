@@ -33,22 +33,42 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import random
 import threading
+import time
+import weakref
 from collections import deque
 from typing import Any, Callable, Mapping
 
 from repro.core.cost_model import KNL7250, HardwareModel
-from repro.core.engine import ExecutorPool
+from repro.core.engine import DeadlineExceeded, ExecutorPool
 from repro.core.graph import Graph
 
 __all__ = [
+    "AdmissionRejected",
     "CalibrationStore",
+    "DeadlineExceeded",
     "ExecutorLease",
     "Runtime",
     "default_runtime",
     "graph_signature",
     "set_default_runtime",
 ]
+
+
+class AdmissionRejected(RuntimeError):
+    """Admission shed this request instead of queueing it (429-style).
+
+    Raised by :meth:`Runtime.lease` when the estimated queue wait exceeds
+    the caller's latency budget: under overload it is better to reject
+    *now* with a :attr:`retry_after` hint than to accept work whose latency
+    is already blown.  ``retry_after`` is jittered (seeded, deterministic
+    per runtime) so a thundering herd of rejected callers does not retry in
+    lock-step."""
+
+    def __init__(self, message: str, retry_after: float):
+        super().__init__(message)
+        self.retry_after = retry_after
 
 
 def graph_signature(graph: Graph, variant: str = "") -> str:
@@ -223,13 +243,45 @@ class _Admission:
     request is never starved by narrow ones barging past it, and total
     leased executors never exceed the pool (no oversubscription, the whole
     point of the admission layer).
+
+    Robustness state on top of the free set:
+
+    * **quarantine** — executors whose threads are still inside an op a
+      deadline-aborted run abandoned.  They are *not* free (handing one out
+      would give the next run a busy thread) and *not* leased; they heal
+      automatically: every acquire/estimate probes the pool
+      (:meth:`ExecutorPool.current_tasks`) and returns idle-again
+      quarantined executors to the free set.
+    * **leak accounting** — ``release`` of an id that is not out on a lease
+      (double release, corrupt release) is counted and ignored instead of
+      corrupting the free set; ids that never come back (a lease that lost
+      them) are recovered by :meth:`reclaim` against the set of live
+      leases, after a grant grace period.
+    * **load estimate** — an EWMA of lease hold times turns queue depth
+      into an expected wait, which :meth:`Runtime.lease` compares against a
+      latency budget to shed (429-style) instead of queueing.
     """
 
-    def __init__(self, n_executors: int):
+    def __init__(self, n_executors: int, *, seed: int = 0,
+                 reclaim_grace: float = 0.25):
         self.n_executors = n_executors
         self._free: set[int] = set(range(n_executors))
         self._cond = threading.Condition()
         self._queue: deque[object] = deque()
+        self._quarantined: set[int] = set()
+        self._granted_at: dict[int, float] = {}
+        self._probe: Callable[[], list] | None = None   # pool.current_tasks
+        self._hold_ewma = 0.0
+        self._rng = random.Random(seed)                  # retry-after jitter
+        self.reclaim_grace = reclaim_grace
+        self.n_bad_releases = 0
+        self.n_leaks_reclaimed = 0
+        self.n_shed = 0
+
+    def attach_probe(self, probe: Callable[[], list]) -> None:
+        """Wire the pool's ``current_tasks`` snapshot in (set once, at pool
+        creation): quarantined executors heal by observing it."""
+        self._probe = probe
 
     @property
     def n_free(self) -> int:
@@ -241,23 +293,74 @@ class _Admission:
         with self._cond:
             return len(self._queue)
 
+    @property
+    def n_quarantined(self) -> int:
+        with self._cond:
+            return len(self._quarantined)
+
+    def _heal_locked(self) -> None:
+        """Return quarantined executors whose hung op has finally finished
+        (their thread is idle again) to the free set.  Lock held."""
+        if not self._quarantined or self._probe is None:
+            return
+        cur = self._probe()
+        healed = {e for e in self._quarantined if cur[e] is None}
+        if healed:
+            self._quarantined.difference_update(healed)
+            self._free.update(healed)
+            self._cond.notify_all()
+
+    def estimated_wait(self, width: int) -> float:
+        """Expected queue wait for a ``width`` lease right now: zero when it
+        would be granted immediately, else queue depth times the EWMA of
+        recent lease hold times.  Deliberately coarse — a shed decision
+        needs the order of magnitude, not the schedule."""
+        with self._cond:
+            self._heal_locked()
+            if not self._queue and len(self._free) >= width:
+                return 0.0
+            return (len(self._queue) + 1) * max(self._hold_ewma, 1e-3)
+
+    def retry_after(self, estimate: float) -> float:
+        """Jittered (seeded — deterministic per admission instance) backoff
+        hint for a shed caller: 0.5x-1.5x the current wait estimate."""
+        with self._cond:
+            self.n_shed += 1
+            return max(estimate, 1e-3) * (0.5 + self._rng.random())
+
     def acquire(
         self,
         width: int,
         timeout: float | None = None,
         prefer: tuple[int, ...] = (),
+        deadline: float | None = None,
     ) -> tuple[int, ...]:
         if width < 1:
             raise ValueError(f"need width >= 1, got {width}")
         width = min(width, self.n_executors)
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            timeout = remaining if timeout is None else min(timeout, remaining)
         ticket = object()
         with self._cond:
-            self._queue.append(ticket)
-            try:
-                ok = self._cond.wait_for(
-                    lambda: self._queue[0] is ticket and len(self._free) >= width,
-                    timeout=timeout,
+            self._heal_locked()
+            if (width > self.n_executors - len(self._quarantined)
+                    and timeout is None):
+                # unsatisfiable until quarantined executors heal: without a
+                # timeout this wait could be forever — fail loudly instead
+                raise RuntimeError(
+                    f"lease of width {width} unsatisfiable: "
+                    f"{len(self._quarantined)} of {self.n_executors} "
+                    "executors quarantined (threads stuck in abandoned ops)"
                 )
+            self._queue.append(ticket)
+
+            def ready() -> bool:
+                self._heal_locked()
+                return self._queue[0] is ticket and len(self._free) >= width
+
+            try:
+                ok = self._cond.wait_for(ready, timeout=timeout)
             except BaseException:
                 # e.g. KeyboardInterrupt mid-wait: an orphaned ticket at the
                 # queue head would wedge strict-FIFO admission forever
@@ -269,7 +372,8 @@ class _Admission:
                 self._cond.notify_all()
                 raise TimeoutError(
                     f"no lease of width {width} within {timeout}s "
-                    f"({len(self._free)} free, {len(self._queue)} waiting)"
+                    f"({len(self._free)} free, {len(self._queue)} waiting, "
+                    f"{len(self._quarantined)} quarantined)"
                 )
             self._queue.popleft()
             # sticky leases: grant the caller's previous executors when they
@@ -282,14 +386,62 @@ class _Admission:
                 picked.extend(rest[: width - len(picked)])
             ids = tuple(sorted(picked))
             self._free.difference_update(ids)
+            now = time.monotonic()
+            for e in ids:
+                self._granted_at[e] = now
             # the next waiter may already be satisfiable (narrower request)
             self._cond.notify_all()
             return ids
 
-    def release(self, ids: tuple[int, ...]) -> None:
+    def release(self, ids: tuple[int, ...], held: float | None = None) -> None:
         with self._cond:
-            self._free.update(ids)
+            # a release of ids that are not out on a lease (double release,
+            # corrupt release) is counted and *ignored* — updating the free
+            # set from a bad release would let leased executors be granted
+            # twice
+            good = [e for e in ids
+                    if e not in self._free and e not in self._quarantined]
+            self.n_bad_releases += len(ids) - len(good)
+            self._free.update(good)
+            for e in good:
+                self._granted_at.pop(e, None)
+            if held is not None and good:
+                a = 0.2
+                self._hold_ewma = (held if self._hold_ewma == 0.0
+                                   else (1 - a) * self._hold_ewma + a * held)
             self._cond.notify_all()
+
+    def quarantine(self, ids: tuple[int, ...]) -> None:
+        """Move leased executors whose threads are stuck inside an abandoned
+        op out of circulation; they heal via :meth:`_heal_locked` when the
+        op eventually returns."""
+        with self._cond:
+            for e in ids:
+                if e not in self._free:
+                    self._quarantined.add(e)
+                    self._granted_at.pop(e, None)
+            self._cond.notify_all()
+
+    def reclaim(self, expected_live: set[int]) -> int:
+        """Recover leaked executor ids: leased-out ids no live lease claims
+        (a corrupt release dropped them, or a lease object was lost).  Only
+        ids granted more than ``reclaim_grace`` seconds ago are eligible, so
+        a grant racing its lease-object registration is never torn away."""
+        now = time.monotonic()
+        with self._cond:
+            leased = (set(range(self.n_executors)) - self._free
+                      - self._quarantined)
+            leaked = {
+                e for e in leased - expected_live
+                if now - self._granted_at.get(e, now) > self.reclaim_grace
+            }
+            if leaked:
+                self._free.update(leaked)
+                for e in leaked:
+                    self._granted_at.pop(e, None)
+                self.n_leaks_reclaimed += len(leaked)
+                self._cond.notify_all()
+            return len(leaked)
 
 
 class ExecutorLease:
@@ -312,6 +464,7 @@ class ExecutorLease:
         self._pool = runtime.pool
         self.executor_ids = executor_ids
         self.n_executors = len(executor_ids)
+        self._granted = time.monotonic()
         self._released = False
 
     def submit(self, ex: int, name: str, task: Callable[[], Any],
@@ -327,10 +480,38 @@ class ExecutorLease:
     def qsize(self, ex: int) -> int:
         return self._pool.qsize(self.executor_ids[ex])
 
-    def release(self) -> None:
-        if not self._released:
-            self._released = True
-            self._runtime._admission.release(self.executor_ids)
+    def current_tasks(self) -> list[tuple[str, float] | None]:
+        """What each *leased* executor is running (local index order)."""
+        cur = self._pool.current_tasks()
+        return [cur[g] for g in self.executor_ids]
+
+    @property
+    def outstanding_ids(self) -> tuple[int, ...]:
+        """Global executor ids this lease still owes back; the currency
+        :meth:`Runtime.reclaim_leaks` reconciles against."""
+        return () if self._released else self.executor_ids
+
+    def release(self, *, quarantine_busy: bool = False) -> None:
+        """Give the executors back.  ``quarantine_busy=True`` is the
+        deadline-abort path: leased executors whose threads are *still
+        inside an op* go to admission quarantine (they would hand the next
+        run a busy thread) and only the idle ones return to the free set.
+        Releasing twice is a no-op."""
+        if self._released:
+            return
+        self._released = True
+        held = time.monotonic() - self._granted
+        adm = self._runtime._admission
+        if quarantine_busy:
+            cur = self._pool.current_tasks()
+            busy = tuple(g for g in self.executor_ids if cur[g] is not None)
+            if busy:
+                adm.quarantine(busy)
+            idle = tuple(g for g in self.executor_ids if g not in busy)
+            if idle:
+                adm.release(idle, held=held)
+            return
+        adm.release(self.executor_ids, held=held)
 
     # pool-interface compatibility: components that "own" their pool call
     # close(); for a lease that means giving the executors back
@@ -379,6 +560,8 @@ class Runtime:
         hw: HardwareModel = KNL7250,
         reserved_workers: int = 2,
         calibration_path: str | None = None,
+        shed_after_s: float | None = None,
+        seed: int = 0,
     ):
         self.n_workers = n_workers if n_workers is not None else _machine_workers()
         if self.n_workers < 1:
@@ -386,9 +569,14 @@ class Runtime:
         self.hw = hw
         self.reserved_workers = reserved_workers
         self.calibration = CalibrationStore(calibration_path)
+        # default latency budget for lease admission: when the estimated
+        # queue wait exceeds it, lease() sheds (AdmissionRejected with a
+        # jittered retry_after) instead of queueing.  None = never shed.
+        self.shed_after_s = shed_after_s
         self._pool: ExecutorPool | None = None
         self._pool_lock = threading.Lock()
-        self._admission = _Admission(self.n_workers)
+        self._admission = _Admission(self.n_workers, seed=seed)
+        self._live_leases: "weakref.WeakSet[ExecutorLease]" = weakref.WeakSet()
         self._cache_lock = threading.Lock()
         self._closed = False
 
@@ -401,7 +589,11 @@ class Runtime:
                 if self._pool is None:
                     if self._closed:
                         raise RuntimeError("Runtime is closed")
-                    self._pool = ExecutorPool(self.n_workers)
+                    pool = ExecutorPool(self.n_workers)
+                    # quarantined executors heal by observing the pool's
+                    # per-executor busy state
+                    self._admission.attach_probe(pool.current_tasks)
+                    self._pool = pool
         return self._pool
 
     def lease(
@@ -409,23 +601,74 @@ class Runtime:
         width: int,
         timeout: float | None = None,
         prefer: tuple[int, ...] = (),
+        *,
+        deadline: float | None = None,
+        shed_after_s: float | None = None,
     ) -> ExecutorLease:
         """Lease ``width`` executors (clamped to ``n_workers``); blocks in
         FIFO order until that many are free.  ``prefer`` are the caller's
         previous executor ids — granted first when free, so a replayed
         graph keeps warm executor threads instead of migrating.  Use as a
         context manager or call ``release()``; every host run through this
-        runtime holds exactly one lease for its duration."""
+        runtime holds exactly one lease for its duration.
+
+        ``deadline`` (absolute, ``time.monotonic``) caps the queue wait on
+        top of ``timeout``.  ``shed_after_s`` (defaulting to the runtime's
+        ``shed_after_s``) is the admission latency budget: when the
+        estimated queue wait exceeds it, raise :class:`AdmissionRejected`
+        immediately — with a jittered ``retry_after`` — instead of joining
+        a queue whose latency is already blown."""
         if self._closed:
             raise RuntimeError("Runtime is closed")
         _ = self.pool  # materialize before handing out ids
-        ids = self._admission.acquire(width, timeout=timeout, prefer=prefer)
-        return ExecutorLease(self, ids)
+        budget = shed_after_s if shed_after_s is not None else self.shed_after_s
+        if budget is not None:
+            est = self._admission.estimated_wait(width)
+            if est > budget:
+                raise AdmissionRejected(
+                    f"admission queue wait ~{est:.3f}s exceeds latency "
+                    f"budget {budget:.3f}s ({self._admission.n_waiting} "
+                    "waiting) — shed",
+                    retry_after=self._admission.retry_after(est),
+                )
+        if self._admission.n_free < width:
+            # under pressure, reconcile first: a corrupt or lost release
+            # must shrink capacity only until detected, not forever
+            self.reclaim_leaks()
+        ids = self._admission.acquire(width, timeout=timeout, prefer=prefer,
+                                      deadline=deadline)
+        lease = ExecutorLease(self, ids)
+        self._live_leases.add(lease)
+        return lease
+
+    def reclaim_leaks(self) -> int:
+        """Recover executor ids leased out but claimed by no live lease
+        (corrupt release, dropped lease object).  Returns the count."""
+        expected: set[int] = set()
+        for lease in list(self._live_leases):
+            expected.update(lease.outstanding_ids)
+        return self._admission.reclaim(expected)
 
     @property
     def leased_executors(self) -> int:
         """Executors currently out on leases (observability/tests)."""
-        return self.n_workers - self._admission.n_free
+        return (self.n_workers - self._admission.n_free
+                - self._admission.n_quarantined)
+
+    def health(self) -> dict:
+        """Liveness counters a supervisor (``repro.fleet``) samples into
+        heartbeats: quarantine or leak growth marks a degrading worker."""
+        adm = self._admission
+        return {
+            "n_workers": self.n_workers,
+            "free": adm.n_free,
+            "waiting": adm.n_waiting,
+            "quarantined": adm.n_quarantined,
+            "bad_releases": adm.n_bad_releases,
+            "leaks_reclaimed": adm.n_leaks_reclaimed,
+            "shed": adm.n_shed,
+            "stuck_close": len(self._pool.stuck_executors) if self._pool else 0,
+        }
 
     # -- planning caches -----------------------------------------------------
     def cached(self, graph: Graph, key: tuple, build: Callable[[], Any]) -> Any:
@@ -478,10 +721,12 @@ class Runtime:
         if self._closed:
             return
         self._closed = True
-        if self._pool is not None:
-            self._pool.close()
+        # persist calibration *before* joining executor threads: a stuck
+        # executor must not cost the measured tables too
         if self.calibration.path is not None:
             self.calibration.save()
+        if self._pool is not None:
+            self._pool.close()
 
     def __enter__(self) -> "Runtime":
         return self

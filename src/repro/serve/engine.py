@@ -29,6 +29,7 @@ Both engines sample over the pad-masked vocabulary
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from contextlib import nullcontext
 from dataclasses import dataclass, field
@@ -229,6 +230,7 @@ class ContinuousEngine(_SamplerMixin):
         runtime: Runtime | None = None,
         decode_host_mode: str = "static",
         schedule_search: str = "auto",
+        step_deadline_s: float | None = None,
     ):
         if cfg.frontend:
             raise ValueError("continuous batching supports decoder-only archs "
@@ -239,6 +241,13 @@ class ContinuousEngine(_SamplerMixin):
         self.params = params
         self.scfg = scfg
         self.hw = hw
+        # per-step deadline: every graph run inside one step() carries
+        # deadline = step start + step_deadline_s, so a hung op raises
+        # DeadlineExceeded (quarantining its executor) instead of wedging
+        # the engine loop — the in-process analogue of the fleet's
+        # SIGKILL-after-silence.  None = wait forever (the default).
+        self.step_deadline_s = step_deadline_s
+        self._step_deadline: float | None = None
         self._key = jax.random.key(rng_seed)
         self.capacity = scfg.max_batch
         self.cache = transformer.init_cache(cfg, self.capacity, scfg.max_len, per_slot=True)
@@ -400,7 +409,7 @@ class ContinuousEngine(_SamplerMixin):
         unflatten to the fn's output pytree."""
         res = exe.execute_host(
             exe.captured.bind(args), n_executors=self.n_executors,
-            pool=pool, host_mode=host_mode,
+            pool=pool, host_mode=host_mode, deadline=self._step_deadline,
         )
         return exe.captured.unflatten(res.outputs)
 
@@ -510,6 +519,8 @@ class ContinuousEngine(_SamplerMixin):
         step.  Returns whether work remains.
         """
         self.n_steps += 1
+        if self.step_deadline_s is not None:
+            self._step_deadline = time.monotonic() + self.step_deadline_s
         free = [i for i, s in enumerate(self.slots) if s is None]
         admits: list[tuple[Request, int]] = []
         while self.pending and free:
@@ -541,6 +552,7 @@ class ContinuousEngine(_SamplerMixin):
                     self._install(*self._admit(r, s, pool=pool))
             elif decoding:
                 self._decode_once(pool)
+        self._step_deadline = None
         return self.has_work
 
     def run(self) -> list[Request]:

@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import hashlib
 import threading
+import time
 from collections import OrderedDict, deque
 from contextlib import nullcontext
 from dataclasses import dataclass
@@ -262,6 +263,7 @@ class PagedEngine(_SamplerMixin):
         runtime: Runtime | None = None,
         decode_host_mode: str = "static",
         schedule_search: str = "auto",
+        step_deadline_s: float | None = None,
     ):
         if not transformer.paged_supported(cfg):
             raise ValueError(
@@ -275,6 +277,9 @@ class PagedEngine(_SamplerMixin):
         self.scfg = scfg
         self.pcfg = paged or PagedConfig()
         self.hw = hw
+        # see ContinuousEngine: per-step graph-run deadline; None = unbounded.
+        self.step_deadline_s = step_deadline_s
+        self._step_deadline: float | None = None
         self._key = jax.random.key(rng_seed)
         self.capacity = scfg.max_batch
         ps = self.pcfg.page_size
@@ -449,7 +454,7 @@ class PagedEngine(_SamplerMixin):
     def _run_exe(self, exe, args: tuple, *, pool, host_mode: str | None = None):
         res = exe.execute_host(
             exe.captured.bind(args), n_executors=self.n_executors,
-            pool=pool, host_mode=host_mode,
+            pool=pool, host_mode=host_mode, deadline=self._step_deadline,
         )
         return exe.captured.unflatten(res.outputs)
 
@@ -606,6 +611,8 @@ class PagedEngine(_SamplerMixin):
         concurrently with one prefill chunk per in-flight prompt, install
         chunk K/V, retire finished requests.  Returns whether work remains."""
         self.n_steps += 1
+        if self.step_deadline_s is not None:
+            self._step_deadline = time.monotonic() + self.step_deadline_s
         ps = self.pcfg.page_size
 
         # 1. admit pending requests into free slots (prefix share / CoW)
@@ -677,6 +684,7 @@ class PagedEngine(_SamplerMixin):
                 task.pos = start + T
                 if task.pos >= task.total:
                     self._finish_prefill(slot, task, logits)
+        self._step_deadline = None
         return self.has_work
 
     def run(self) -> list[Request]:

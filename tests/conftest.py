@@ -24,6 +24,11 @@ def pytest_configure(config):
         "markers",
         "multidevice: subprocess-based multi-device tests (slow; spawn their own jax)",
     )
+    config.addinivalue_line(
+        "markers",
+        "stress: fault-injection / concurrency stress tests (slow; CI runs "
+        "them in a dedicated job under a hard wall-clock timeout)",
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -83,6 +83,51 @@ def test_prefetcher_matches_direct_and_handles_restart():
         pf.close()
 
 
+def test_prefetcher_close_is_prompt_and_quiet(caplog):
+    import logging
+
+    pf = Prefetcher(_src(), start_step=0, depth=2)
+    pf.get(0)
+    with caplog.at_level(logging.WARNING, logger="repro.data.pipeline"):
+        pf.close()
+    assert not pf._thread.is_alive()
+    assert not caplog.records          # healthy producer: no stuck warning
+
+
+def test_prefetcher_close_names_stuck_stage(caplog):
+    """A producer wedged inside its generator cannot be interrupted, but
+    close() must say so — naming the stage — instead of silently leaking
+    the thread (ISSUE 9 satellite)."""
+    import logging
+    import threading
+
+    release = threading.Event()
+
+    class WedgedSource:
+        def __init__(self):
+            self.cfg = DataConfig(vocab_size=7, seq_len=4, global_batch=2)
+            self._n = 0
+
+        def batch(self, step):
+            self._n += 1
+            if self._n > 1:            # first batch fills the queue fast
+                release.wait(30)       # then the generator wedges
+            return SyntheticTokens(self.cfg).batch(step)
+
+    pf = Prefetcher(WedgedSource(), start_step=0, depth=1)
+    try:
+        pf.get(0)
+        with caplog.at_level(logging.WARNING, logger="repro.data.pipeline"):
+            pf.close(timeout=0.3)
+        stuck = [r for r in caplog.records if "stuck in" in r.message]
+        assert stuck, "close() abandoned the producer silently"
+        assert "generate(step=" in stuck[0].message
+    finally:
+        release.set()
+        pf._thread.join(timeout=5)
+        assert not pf._thread.is_alive()
+
+
 # ---------------------------------------------------------------------------
 # checkpoint
 # ---------------------------------------------------------------------------

@@ -396,3 +396,193 @@ def test_pool_close_with_segments_in_flight_completes_the_run():
     assert "err" not in box, box.get("err")
     assert box["res"].outputs == oracle
     pool.close()                                  # and again, idempotent
+
+
+# ---------------------------------------------------------------------------
+# robustness (ISSUE 9): deadlines, quarantine + healing, shedding, leak
+# reclaim, stuck-close diagnostics, admission exception paths under load
+# ---------------------------------------------------------------------------
+
+def _slow_graph(name="wedge", sleep_s=5.0):
+    g = Graph(name)
+    g.add_op("x", kind="input")
+    g.add_op("slow", deps=("x",), flops=1.0,
+             fn=lambda v: (time.sleep(sleep_s), v)[1])
+    g.add_op("out", deps=("slow",), flops=1.0, fn=lambda v: v + 1)
+    return g
+
+
+def test_pool_close_stuck_thread_raises_and_names_op():
+    """A thread stuck in an op past the close timeout must not be silently
+    abandoned: close() raises, naming the executor and the op."""
+    import queue as _queue
+
+    pool = ExecutorPool(2)
+    release = threading.Event()
+    pool.submit(0, "wedged_op", lambda: release.wait(30), _queue.SimpleQueue(),
+                time.monotonic())
+    time.sleep(0.05)
+    try:
+        with pytest.raises(RuntimeError, match="wedged_op"):
+            pool.close(timeout=0.2)
+        assert pool.stuck_executors
+        assert pool.stuck_executors[0][1] == "wedged_op"
+    finally:
+        release.set()
+        pool.close(timeout=5.0)
+
+
+def test_pool_close_stuck_warns_without_raise_when_asked(caplog):
+    import logging
+    import queue as _queue
+
+    pool = ExecutorPool(2)
+    release = threading.Event()
+    pool.submit(1, "hung", lambda: release.wait(30), _queue.SimpleQueue(),
+                time.monotonic())
+    time.sleep(0.05)
+    try:
+        with caplog.at_level(logging.WARNING, logger="repro.core.engine"):
+            pool.close(timeout=0.2, raise_on_stuck=False)
+        assert any("hung" in r.message for r in caplog.records)
+    finally:
+        release.set()
+        pool.close(timeout=5.0)
+
+
+def test_host_run_deadline_raises_and_frees_the_lease():
+    """A hung op overshoots the deadline: the run raises DeadlineExceeded
+    naming the in-flight op, the busy executor is quarantined (not
+    returned to circulation), and it heals once the op finally returns."""
+    from repro.core.engine import HostScheduler
+
+    rt = Runtime(2)
+    try:
+        g = _slow_graph(sleep_s=1.0)
+        lease = rt.lease(2)
+        sched = HostScheduler(g, 2, pool=lease)
+        with pytest.raises(repro.DeadlineExceeded, match="slow"):
+            sched.run({"x": 1.0}, deadline=time.monotonic() + 0.15)
+        lease.release(quarantine_busy=True)
+        assert rt.health()["quarantined"] >= 1
+        # while quarantined, full-width leases are not grantable
+        with pytest.raises(TimeoutError):
+            rt.lease(2, timeout=0.1)
+        # the op returns -> the executor heals -> full width grantable again
+        time.sleep(1.1)
+        lease2 = rt.lease(2, timeout=5.0)
+        assert rt.health()["quarantined"] == 0
+        lease2.release()
+    finally:
+        rt.close()
+
+
+def test_execute_host_deadline_quarantines_via_api():
+    rt = Runtime(2)
+    try:
+        exe = repro.compile(_slow_graph("deadline_graph", sleep_s=0.8),
+                            backend="host", n_executors=2,
+                            host_mode="dynamic", runtime=rt)
+        with pytest.raises(repro.DeadlineExceeded):
+            exe.execute_host({"x": 2.0}, deadline=time.monotonic() + 0.1)
+        assert rt.health()["quarantined"] >= 1
+        time.sleep(1.0)
+        lease = rt.lease(rt.n_workers, timeout=5.0)  # healed: full width
+        lease.release()
+    finally:
+        rt.close()
+
+
+def test_lease_shedding_rejects_with_jittered_retry_after():
+    rt = Runtime(1, shed_after_s=0.05, seed=7)
+    try:
+        hold = rt.lease(1)
+        # prime the hold-time estimate so estimated_wait() is meaningful
+        rt._admission._hold_ewma = 0.5
+        # an explicit per-call budget overrides the runtime default: this
+        # waiter queues instead of shedding
+        waiter = threading.Thread(
+            target=lambda: rt.lease(1, timeout=2.0,
+                                    shed_after_s=1e9).release())
+        waiter.start()
+        time.sleep(0.05)          # ensure the queue is non-empty
+        with pytest.raises(repro.AdmissionRejected) as ei:
+            rt.lease(1)
+        assert ei.value.retry_after > 0.0
+        assert rt.health()["shed"] == 1
+        hold.release()
+        waiter.join(timeout=5)
+        assert not waiter.is_alive()
+    finally:
+        rt.close()
+
+
+def test_dropped_lease_is_reclaimed_not_leaked():
+    """A lease object that is dropped without release() (the corrupt-client
+    case) must not shrink capacity forever: reclaim_leaks recovers the ids
+    after the grace period."""
+    rt = Runtime(2)
+    try:
+        rt.lease(2)               # dropped on the floor: no release()
+        import gc
+
+        gc.collect()              # the WeakSet entry dies with the object
+        time.sleep(0.3)           # past the reclaim grace window
+        assert rt.reclaim_leaks() == 2 or rt._admission.n_free == 2
+        lease = rt.lease(2, timeout=1.0)
+        lease.release()
+        assert rt.health()["leaks_reclaimed"] >= 2
+    finally:
+        rt.close()
+
+
+@pytest.mark.stress
+def test_admission_hammered_with_exceptions_stays_consistent():
+    """Many threads acquire/release concurrently while some abort with
+    exceptions mid-wait and some double-release: afterwards the admission
+    state must show every executor free and nobody waiting."""
+    rt = Runtime(3, seed=1)
+    try:
+        stop = time.monotonic() + 1.5
+        errs: list[BaseException] = []
+
+        def worker(i):
+            rng = np.random.default_rng(i)
+            try:
+                while time.monotonic() < stop:
+                    w = int(rng.integers(1, 4))
+                    try:
+                        lease = rt.lease(w, timeout=0.05)
+                    except TimeoutError:
+                        continue
+                    if rng.random() < 0.2:
+                        raise RuntimeError("simulated client crash")
+                    time.sleep(float(rng.random()) * 0.004)
+                    lease.release()
+                    if rng.random() < 0.3:
+                        lease.release()          # double release: no-op
+            except RuntimeError:
+                # crashed client: lease dropped without release
+                pass
+            except BaseException as e:  # noqa: BLE001 — collected for assert
+                errs.append(e)
+
+        ths = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+        for t in ths:
+            t.start()
+        for t in ths:
+            t.join(timeout=30)
+        assert not errs, errs
+        assert all(not t.is_alive() for t in ths)
+        import gc
+
+        gc.collect()
+        time.sleep(0.3)
+        rt.reclaim_leaks()
+        h = rt.health()
+        assert h["free"] == 3, h                 # no stranded lease width
+        assert h["waiting"] == 0, h              # no stale tickets
+        lease = rt.lease(3, timeout=1.0)         # full width still grantable
+        lease.release()
+    finally:
+        rt.close()

@@ -243,3 +243,35 @@ def test_rejects_unsupported_archs(model):
 def test_static_decode_plan_is_default(engine):
     assert engine.decode_host_mode == "static"
     assert engine.n_executors >= 1
+
+
+@pytest.mark.stress
+def test_repeated_eviction_under_sustained_pressure_stays_exact(model):
+    """ISSUE 9 satellite: a page pool held at the edge of exhaustion across
+    a stream of staggered requests forces eviction + requeue + chunked
+    recompute over and over; every stream must stay bit-exact and the pool
+    must never exceed its physical page budget."""
+    cfg, params = model
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(12, 24))).astype(np.int32)
+               for _ in range(6)]
+    with PagedEngine(cfg, params, ServeConfig(max_batch=2, max_len=48),
+                     paged=PagedConfig(page_size=8, prefill_chunk=8,
+                                       n_pages=6, share_prefix=False)) as eng:
+        reqs = [Request(request_id=i, prompt=p, max_new_tokens=6)
+                for i, p in enumerate(prompts)]
+        # staggered submission keeps admission churning against eviction
+        for i, r in enumerate(reqs):
+            eng.submit(r)
+            if i % 2 == 1:
+                for _ in range(3):
+                    if eng.has_work:
+                        eng.step()
+        done = eng.run()
+        assert eng.n_evictions >= 2, "pressure never forced repeat evictions"
+        assert eng.page_pool.peak_used <= 6
+    assert sorted(r.request_id for r in done) == list(range(6))
+    for r in sorted(done, key=lambda r: r.request_id):
+        assert r.output == _reference_decode(cfg, params, prompts[r.request_id], 6), \
+            f"request {r.request_id} diverged after eviction/recompute"
