@@ -53,6 +53,11 @@ _EXPORTS = {
     # compiled static host plans (host_mode="static")
     "StaticHostPlan": "repro.core.static_host",
     "compile_host_plan": "repro.core.static_host",
+    # measured hardware performance (topology, pinning, interference)
+    "CpuTopology": "repro.hwperf",
+    "detect_topology": "repro.hwperf",
+    "ContentionModel": "repro.hwperf",
+    "measure_interference": "repro.hwperf",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -409,7 +409,16 @@ class Executable:
             hazards=hazards,
         )
 
-    def describe(self) -> str:
+    def describe(self, *, trace: bool | str = False) -> str:
+        """One-paragraph summary of the executable; with ``trace`` a
+        per-executor timeline is appended (paper §5.2's visualization).
+
+        ``trace=True`` renders an ASCII timeline, ``trace="csv"`` the CSV
+        table (:mod:`repro.core.trace`).  The timeline shows the **last
+        run** when one exists (measured, host or sim backend) and falls
+        back to a fresh cost-model simulation otherwise — the source is
+        labeled, so measured-vs-simulated timelines are distinguishable.
+        """
         g = self._graph
         sched = self.schedule
         cp_len, cp = self.critical_path
@@ -431,7 +440,7 @@ class Executable:
             )
         else:
             search_line = ""
-        return (
+        text = (
             f"Executable({g.name!r}, backend={self.backend!r}, hw={self.hw.name})\n"
             f"  nodes={len(g)} width={g.width()} flops={g.total_flops():.3g}\n"
             f"  config: {sched.n_executors} executors x {sched.team_size} workers "
@@ -442,6 +451,32 @@ class Executable:
             f"{' -> '.join(cp[:6])}{' ...' if len(cp) > 6 else ''}"
             f"{search_line}"
         )
+        if trace:
+            text += "\n" + self.render_trace(
+                fmt="csv" if trace == "csv" else "ascii")
+        return text
+
+    def render_trace(self, *, fmt: str = "ascii") -> str:
+        """The per-executor execution timeline: the last run's measured
+        trace when one exists, else a fresh cost-model simulation.
+        ``fmt="ascii"`` or ``"csv"`` (:mod:`repro.core.trace`)."""
+        from repro.core.trace import ascii_timeline, trace_csv
+
+        run = self.last_run
+        if run is not None and getattr(run, "trace", None):
+            source = ("simulated" if isinstance(run, SimResult)
+                      else "measured")
+        else:
+            run = self.simulate()
+            source = "simulated"
+        n = (run.config.n_executors if isinstance(run, SimResult)
+             else 1 + max((e.executor for e in run.trace), default=0))
+        if fmt == "csv":
+            return trace_csv(run.trace)
+        if fmt != "ascii":
+            raise ValueError(f"fmt must be 'ascii' or 'csv', got {fmt!r}")
+        return (f"trace ({source}, {len(run.trace)} ops):\n"
+                + ascii_timeline(run.trace, n))
 
     # -- execution ----------------------------------------------------------
     def _host_executors(self, n_executors: int | None = None) -> int:
@@ -733,6 +768,7 @@ def compile(
     runtime: Runtime | None = None,
     check: str = "basic",
     schedule_search: str = "auto",
+    pinning: str | None = None,
 ) -> Executable:
     """Turn a JAX function (or a pre-built :class:`Graph`) into a scheduled
     :class:`Executable`.
@@ -766,6 +802,10 @@ def compile(
     schedules with ``policy``.  Winners persist in the runtime's store per
     graph signature, so the search runs once per (graph, executor config,
     cost model) across processes.
+    ``pinning`` sets the bound runtime's executor-thread core pinning
+    (:mod:`repro.hwperf`): ``"off"``, ``"auto"`` (pin where supported,
+    silent no-op elsewhere), or ``"on"`` (pin, one warning where
+    unsupported); ``None`` leaves the runtime's current mode alone.
     """
     captured: CapturedGraph | None = None
     if isinstance(target, CapturedGraph):
@@ -784,6 +824,8 @@ def compile(
         graph = _jit_graph(graph)
     if runtime is None and pool is None:
         runtime = default_runtime()
+    if pinning is not None and runtime is not None:
+        runtime.set_pinning(pinning)
     signature = graph_signature(graph, variant="jit" if jit_nodes else "")
     exe = Executable(
         graph,

@@ -132,6 +132,13 @@ class ExecutorPool:
         """Approximate queued depth on one executor (cross-run load signal)."""
         return self._buffers[ex].qsize()
 
+    def executor_thread_ids(self) -> list[int | None]:
+        """OS-level (native) thread id per executor, ``None`` for a thread
+        not yet started or already exited — the handles
+        :func:`repro.hwperf.pinning.pin_pool` passes to
+        ``os.sched_setaffinity``."""
+        return [t.native_id if t.is_alive() else None for t in self._threads]
+
     def current_tasks(self) -> list[tuple[str, float] | None]:
         """Snapshot of what each executor is running *right now*:
         ``(op name, started_at)`` per executor, ``None`` when idle.  The

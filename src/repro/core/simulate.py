@@ -66,8 +66,15 @@ class SimConfig:
     cpf_push_cost: float = 0.3e-6
     queue_base_cost: float = 1.0e-6
     queue_contention_cost: float = 1.5e-6
-    # interference (paper Fig 3 / §3.1): multiplies every op duration
+    # interference (paper Fig 3 / §3.1).  ``duration_multiplier`` is the
+    # legacy scalar guess: multiplies every op duration uniformly.
+    # ``contention`` is the measured replacement — an object with
+    # ``multiplier_for(node, co_resident_nodes) -> float``
+    # (repro.hwperf.model.ContentionModel): each op's duration is scaled by
+    # the worst measured pairwise slowdown against the ops co-resident at
+    # its dispatch.  Both compose (scalar first) for A/B comparisons.
     duration_multiplier: float = 1.0
+    contention: object | None = None
     # run-time variation (paper §4.3, "unpredictable variations")
     jitter: float = 0.0
     # TP collective term applies when an op is sharded over a linked fabric
@@ -231,6 +238,13 @@ def simulate(
             start = max(t0, dispatch_free) + deq
             dispatch_free = start
             dur = costs[op] * cfg.duration_multiplier
+            if cfg.contention is not None:
+                # measured interference: ops still in flight at this op's
+                # start are its co-residents; scale by the worst pairwise
+                # class slowdown the co-location harness measured
+                co = [graph[o] for (c_end, _, o, _) in completions
+                      if c_end > start]
+                dur *= cfg.contention.multiplier_for(graph[op], co)
             if cfg.cache_affinity and any(
                 producer_exec.get(d) == e for d in graph.predecessors(op)
             ):

@@ -1,0 +1,208 @@
+"""Co-location harness: run op-class workloads concurrently on pinned core
+sets and measure the slowdown each pair inflicts vs running alone.
+
+This is the measured version of the paper's Fig 3 axis.  ``calibrate()``
+times every op *solo*; here two workloads start behind a barrier on
+disjoint pinned core sets and each reports its own per-iteration time.
+``pair / solo`` is the contention coefficient that
+:mod:`repro.hwperf.model` turns into a cost adjustment and a placement
+policy.
+
+Workloads are small numpy kernels chosen to stress the three contended
+resources the op classes map onto:
+
+* ``gemm`` — execution ports / FMA throughput (compute-bound matmul);
+* ``elementwise`` — modest bandwidth + ports (fused vector arithmetic);
+* ``memory`` — cache and DRAM bandwidth (large streaming copy).
+
+On a 1-CPU box (this container) the "disjoint" sets overlap, so measured
+slowdowns just say "time-sharing costs 2x" — still a valid signal for the
+model, but the bench marks the run degraded and skips hardware gates.
+"""
+from __future__ import annotations
+
+import statistics
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from .pinning import pin_current_thread
+from .topology import CpuTopology, detect_topology, disjoint_core_sets
+
+__all__ = [
+    "Workload",
+    "InterferenceMatrix",
+    "default_workloads",
+    "measure_interference",
+]
+
+
+@dataclass(frozen=True)
+class Workload:
+    """One op-class proxy: ``setup()`` builds state once, ``run(state)`` is
+    the timed unit of work."""
+
+    op_class: str
+    setup: Callable[[], object]
+    run: Callable[[object], object]
+
+
+def default_workloads(*, scale: int = 192) -> list[Workload]:
+    """The three contended-resource proxies.  ``scale`` sets the matmul
+    side / vector length so smoke runs finish in milliseconds."""
+    n = max(32, scale)
+
+    def gemm_setup():
+        rng = np.random.default_rng(0)
+        return (rng.standard_normal((n, n), dtype=np.float32),
+                rng.standard_normal((n, n), dtype=np.float32))
+
+    def gemm_run(state):
+        a, b = state
+        return a @ b
+
+    def elem_setup():
+        rng = np.random.default_rng(1)
+        return rng.standard_normal(n * n, dtype=np.float32)
+
+    def elem_run(x):
+        return np.tanh(x * 1.0001 + 0.5)
+
+    def mem_setup():
+        # large enough to spill L2 even scaled down: streaming copy is
+        # bandwidth-bound, the contended resource for memory-class ops
+        rng = np.random.default_rng(2)
+        return (rng.standard_normal(8 * n * n, dtype=np.float32),
+                np.empty(8 * n * n, dtype=np.float32))
+
+    def mem_run(state):
+        src, dst = state
+        np.copyto(dst, src)
+        return dst
+
+    return [
+        Workload("gemm", gemm_setup, gemm_run),
+        Workload("elementwise", elem_setup, elem_run),
+        Workload("memory", mem_setup, mem_run),
+    ]
+
+
+@dataclass
+class InterferenceMatrix:
+    """Solo medians and pairwise co-run medians, seconds per iteration.
+
+    ``pair[(a, b)]`` is *a*'s per-iteration time while *b* runs beside it —
+    asymmetric by construction (a matmul barely notices a copy loop; the
+    copy loop notices the matmul's cache pressure).
+    """
+
+    solo: dict[str, float] = field(default_factory=dict)
+    pair: dict[tuple[str, str], float] = field(default_factory=dict)
+    pinned: bool = False
+    disjoint: bool = False
+
+    def slowdown(self, a: str, b: str) -> float:
+        """How much slower ``a`` runs beside ``b`` than alone (>= 1.0 when
+        there is contention; clamped below at 1.0 — timer noise must not
+        turn co-location into a speedup)."""
+        base = self.solo.get(a)
+        co = self.pair.get((a, b))
+        if not base or co is None:
+            return 1.0
+        return max(1.0, co / base)
+
+    def classes(self) -> list[str]:
+        return sorted(self.solo)
+
+
+def _timed_loop(wl: Workload, state, iters: int, barrier, cpus,
+                out: dict, key: str, stop: threading.Event | None) -> None:
+    """One measurement thread: pin, warm, sync on the barrier, then time
+    ``iters`` runs (or loop until ``stop`` when acting as background load)."""
+    if cpus:
+        out[f"{key}_pinned"] = pin_current_thread(cpus)
+    wl.run(state)  # warm caches / allocator before the barrier
+    barrier.wait()
+    if stop is not None:
+        while not stop.is_set():
+            wl.run(state)
+        return
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        wl.run(state)
+    out[key] = (time.perf_counter() - t0) / iters
+
+
+def _run_pair(a: Workload, b: Workload, cpus_a, cpus_b,
+              iters: int) -> float:
+    """Per-iteration time of ``a`` while ``b`` loops beside it.  ``b`` runs
+    until ``a`` finishes so ``a`` is co-resident for its whole window."""
+    state_a, state_b = a.setup(), b.setup()
+    barrier = threading.Barrier(2)
+    stop = threading.Event()
+    out: dict = {}
+    ta = threading.Thread(
+        target=_timed_loop, args=(a, state_a, iters, barrier, cpus_a,
+                                  out, "a", None), daemon=True)
+    tb = threading.Thread(
+        target=_timed_loop, args=(b, state_b, 0, barrier, cpus_b,
+                                  out, "b", stop), daemon=True)
+    tb.start()
+    ta.start()
+    ta.join()
+    stop.set()
+    tb.join()
+    return out["a"]
+
+
+def measure_interference(
+    workloads: list[Workload] | None = None,
+    topology: CpuTopology | None = None,
+    *,
+    iters: int = 20,
+    repeats: int = 3,
+    pinned: bool = True,
+) -> InterferenceMatrix:
+    """Measure solo and pairwise co-run times for every workload pair.
+
+    Each measurement repeats ``repeats`` times and keeps the median — a
+    single descheduling event must not become a contention coefficient.
+    With ``pinned=False`` (or where affinity is unsupported) threads run
+    OS-scheduled; the matrix records which mode actually happened.
+    """
+    wls = workloads if workloads is not None else default_workloads()
+    topo = topology if topology is not None else detect_topology()
+    sets = disjoint_core_sets(topo, 2)
+    cpus_a, cpus_b = (sets[0], sets[1]) if pinned else (None, None)
+    disjoint = pinned and not set(sets[0]) & set(sets[1])
+
+    m = InterferenceMatrix(pinned=False, disjoint=disjoint)
+    pin_results: list[bool] = []
+    for wl in wls:
+        state = wl.setup()
+        runs = []
+        for _ in range(repeats):
+            barrier = threading.Barrier(1)
+            out: dict = {}
+            t = threading.Thread(
+                target=_timed_loop,
+                args=(wl, state, iters, barrier, cpus_a, out, "a", None),
+                daemon=True)
+            t.start()
+            t.join()
+            runs.append(out["a"])
+            if "a_pinned" in out:
+                pin_results.append(out["a_pinned"])
+        m.solo[wl.op_class] = statistics.median(runs)
+    # "pinned" only when every attempted pin actually took — a matrix
+    # measured with OS-rejected pins is an unpinned measurement
+    m.pinned = bool(pin_results) and all(pin_results)
+    for a in wls:
+        for b in wls:
+            runs = [_run_pair(a, b, cpus_a, cpus_b, iters)
+                    for _ in range(repeats)]
+            m.pair[(a.op_class, b.op_class)] = statistics.median(runs)
+    return m

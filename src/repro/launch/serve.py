@@ -212,6 +212,15 @@ def main() -> int:
     p.add_argument("--calibration-store", default=None,
                    help="JSON path backing the Runtime's calibration store "
                         "(measured op costs survive restarts)")
+    p.add_argument("--pinning", choices=("off", "auto", "on"), default="off",
+                   help="pin executor threads to disjoint core sets "
+                        "(repro.hwperf): 'auto' pins where the platform "
+                        "supports affinity, 'on' warns once where it "
+                        "doesn't (continuous/paged only)")
+    p.add_argument("--dump-trace", choices=("ascii", "csv"), default=None,
+                   help="print the decode executable's last execution "
+                        "timeline (measured if available, else simulated) "
+                        "after serving (continuous/paged only)")
     p.add_argument("--schedule-search", choices=("off", "auto", "force"),
                    default="auto",
                    help="simulator-guided schedule search over registered "
@@ -254,7 +263,8 @@ def main() -> int:
         # executor width from it per step instead of owning a pool
         import repro
         runtime = repro.Runtime(args.runtime_workers,
-                                calibration_path=args.calibration_store)
+                                calibration_path=args.calibration_store,
+                                pinning=args.pinning)
         repro.set_default_runtime(runtime)
         if args.paged:
             pcfg = PagedConfig(page_size=args.page_size, n_pages=args.n_pages,
@@ -335,6 +345,9 @@ def main() -> int:
     print(f"[{mode}] served {len(done)} requests, {n_tokens} tokens in {wall:.2f}s "
           f"({n_tokens / wall:.1f} tok/s incl. prefill+compile); "
           f"latency p50={p50 * 1e3:.0f}ms p95={p95 * 1e3:.0f}ms")
+    if continuous and args.dump_trace:
+        # measured-vs-simulated timeline of the decode graph (paper §5.2)
+        print(engine._decode_exe.render_trace(fmt=args.dump_trace))
     if args.paged:
         print("  " + " ".join(f"{k}={v}" for k, v in engine.stats().items()))
         engine.close()

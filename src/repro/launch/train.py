@@ -47,6 +47,13 @@ def main() -> int:
                         "loss-graph schedule: 'auto' searches when measured "
                         "costs back the graph, 'force' always, 'off' plain "
                         "CPF")
+    p.add_argument("--pinning", choices=("off", "auto", "on"), default="off",
+                   help="pin the Runtime's executor threads to disjoint "
+                        "core sets (repro.hwperf): 'auto' where supported, "
+                        "'on' warns once where it isn't")
+    p.add_argument("--dump-trace", choices=("ascii", "csv"), default=None,
+                   help="print the Graphi loss graph's execution timeline "
+                        "(simulated on this sim-backend path)")
     args = p.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -56,7 +63,8 @@ def main() -> int:
     # through it (shared schedule caches + persistent calibration), and any
     # host-backend execution in this process leases its executors
     import repro
-    runtime = repro.Runtime(calibration_path=args.calibration_store)
+    runtime = repro.Runtime(calibration_path=args.calibration_store,
+                            pinning=args.pinning)
     repro.set_default_runtime(runtime)
     scheduled_makespan = None
     if not args.no_graphi:
@@ -70,6 +78,8 @@ def main() -> int:
               f"{exe.schedule.team_size} executors ({exe.schedule.policy}), "
               f"scheduled makespan "
               f"{scheduled_makespan * 1e3:.2f} ms ({runtime.describe()})")
+        if args.dump_trace:
+            print(exe.render_trace(fmt=args.dump_trace))
 
     from repro.optim.adamw import AdamWConfig
 

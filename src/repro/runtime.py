@@ -97,7 +97,7 @@ class CalibrationStore:
     """Measured op-cost tables and searched-schedule winners, keyed by
     :func:`graph_signature`.
 
-    Each signature owns two sections (JSON ``format: 2``):
+    Each signature owns two sections (JSON ``format: 3``):
 
     * ``costs`` — ``{op_name: seconds}`` from
       :func:`~repro.core.profiler.measure_op_costs`;
@@ -108,10 +108,18 @@ class CalibrationStore:
       winning schedule deterministically, so the simulator search runs once
       per (graph, executor config, cost model) across processes.
 
-    Format-1 files (bare ``{sig: {op: seconds}}`` entries) still load —
-    they migrate to cost-only sections in memory and are rewritten as
-    format 2 on the next save.  Unknown *future* formats raise a
-    :class:`ValueError` naming the file rather than guessing.
+    Format 3 adds one machine-wide top-level section, ``interference`` —
+    the measured contention model from :mod:`repro.hwperf`
+    (``ContentionModel.to_dict()``: per-op-class solo times and pairwise
+    co-run slowdowns).  It is machine state, not graph state, so it lives
+    beside ``entries``, not inside them.
+
+    Format-1 files (bare ``{sig: {op: seconds}}`` entries) and format-2
+    files (no ``interference`` section) still load — they migrate in
+    memory (costs and schedules are never lost to a format bump; the
+    interference section starts empty) and are rewritten as format 3 on
+    the next save.  Unknown *future* formats raise a :class:`ValueError`
+    naming the file rather than guessing.
 
     With a ``path`` the store loads existing entries at construction and
     autosaves (atomic tmp+rename) on every :meth:`put` /
@@ -119,13 +127,17 @@ class CalibrationStore:
     trainer reading may race.
     """
 
-    _FORMAT = 2
+    _FORMAT = 3
 
     def __init__(self, path: str | None = None):
         self.path = path
         self._entries: dict[str, dict[str, float]] = {}
         # signature -> config_key -> winner record (JSON-able dict)
         self._schedules: dict[str, dict[str, dict]] = {}
+        # machine-wide measured contention model (ContentionModel.to_dict());
+        # empty dict = "measured nothing yet", kept distinct from format-2
+        # files that predate the section (also loaded as empty)
+        self._interference: dict = {}
         self._lock = threading.Lock()
         self._io_lock = threading.Lock()   # serializes concurrent save()s
         if path is not None and os.path.exists(path):
@@ -145,6 +157,22 @@ class CalibrationStore:
     def put(self, signature: str, costs: Mapping[str, float]) -> None:
         with self._lock:
             self._entries[signature] = {k: float(v) for k, v in costs.items()}
+        if self.path is not None:
+            self.save(self.path)
+
+    def get_interference(self) -> dict | None:
+        """The machine-wide measured contention section
+        (``ContentionModel.to_dict()`` shape), or ``None`` when nothing has
+        been measured (including stores migrated from formats 1/2)."""
+        with self._lock:
+            return dict(self._interference) if self._interference else None
+
+    def put_interference(self, section: Mapping) -> None:
+        """Persist a measured contention model (the whole section replaces
+        the old one — coefficients from two different measurement runs must
+        not interleave)."""
+        with self._lock:
+            self._interference = dict(section)
         if self.path is not None:
             self.save(self.path)
 
@@ -187,7 +215,11 @@ class CalibrationStore:
                     }
                     for sig in sigs
                 }
-                payload = {"format": self._FORMAT, "entries": entries}
+                payload = {
+                    "format": self._FORMAT,
+                    "entries": entries,
+                    "interference": dict(self._interference),
+                }
                 blob = json.dumps(payload, indent=1, sort_keys=True)
             with open(tmp, "w") as f:
                 f.write(blob)
@@ -197,9 +229,10 @@ class CalibrationStore:
     def load(self, path: str | None = None) -> int:
         """Merge entries from ``path`` (disk wins); returns the entry count.
 
-        Accepts the current format 2 and migrates format-1 files (costs
-        only — measured seconds are never lost to a format bump); any other
-        format raises a :class:`ValueError` naming the file.
+        Accepts the current format 3 and migrates format-1 (bare cost
+        tables) and format-2 (no interference section) files — measured
+        seconds and searched schedules are never lost to a format bump; any
+        other format raises a :class:`ValueError` naming the file.
         """
         path = path if path is not None else self.path
         if path is None:
@@ -209,11 +242,14 @@ class CalibrationStore:
         fmt = payload.get("format")
         costs_in: dict[str, dict[str, float]] = {}
         scheds_in: dict[str, dict[str, dict]] = {}
+        interference_in: dict = {}
         if fmt == 1:
             # format 1: entries are bare {sig: {op: seconds}} cost tables
             for sig, costs in payload["entries"].items():
                 costs_in[sig] = {k: float(v) for k, v in costs.items()}
-        elif fmt == self._FORMAT:
+        elif fmt in (2, self._FORMAT):
+            # format 2 is format 3 minus the interference section: one
+            # parse, sections default empty
             for sig, section in payload["entries"].items():
                 costs_in[sig] = {
                     k: float(v) for k, v in section.get("costs", {}).items()
@@ -221,10 +257,11 @@ class CalibrationStore:
                 sch = section.get("schedule", {})
                 if sch:
                     scheds_in[sig] = {ck: dict(rec) for ck, rec in sch.items()}
+            interference_in = dict(payload.get("interference", {}))
         else:
             raise ValueError(
                 f"calibration store {path!r} has format {fmt!r}; this build "
-                f"reads formats 1 and {self._FORMAT}"
+                f"reads formats 1, 2 and {self._FORMAT}"
             )
         with self._lock:
             # a format-2 sig may be schedule-only: an empty costs section
@@ -232,6 +269,8 @@ class CalibrationStore:
             self._entries.update({s: c for s, c in costs_in.items() if c})
             for sig, by_cfg in scheds_in.items():
                 self._schedules.setdefault(sig, {}).update(by_cfg)
+            if interference_in:
+                self._interference = interference_in
             return len(self._entries)
 
 
@@ -548,10 +587,24 @@ class Runtime:
     calibration_path:
         JSON file backing the :class:`CalibrationStore`.  Loaded at
         construction when it exists; autosaved on every ``calibrate()``.
+    pinning:
+        Executor-thread core pinning (paper §3.1): ``"off"`` (default —
+        OS-scheduled, the pre-hwperf behavior), ``"auto"`` (pin when the
+        platform supports affinity, silently run unpinned otherwise), or
+        ``"on"`` (pin, with a single warning where unsupported).  Applied
+        when the pool is created; :attr:`pinning_applied` records what
+        actually happened.
 
     The executor pool is created lazily on first host execution, so
-    sim-only runtimes (the dry-run sweep) never spawn threads.
+    sim-only runtimes (the dry-run sweep) never spawn threads.  When the
+    calibration store carries a measured ``interference`` section, the
+    ``cpf-contention`` placement policy (:mod:`repro.hwperf.model`) is
+    installed in the policy registry at construction, so
+    ``policy="cpf-contention"`` resolves for every executable on this
+    runtime.
     """
+
+    PINNING_MODES = ("off", "auto", "on")
 
     def __init__(
         self,
@@ -562,13 +615,23 @@ class Runtime:
         calibration_path: str | None = None,
         shed_after_s: float | None = None,
         seed: int = 0,
+        pinning: str = "off",
     ):
         self.n_workers = n_workers if n_workers is not None else _machine_workers()
         if self.n_workers < 1:
             raise ValueError(f"need >= 1 worker, got {self.n_workers}")
+        if pinning not in self.PINNING_MODES:
+            raise ValueError(
+                f"pinning must be one of {self.PINNING_MODES}, got {pinning!r}")
         self.hw = hw
         self.reserved_workers = reserved_workers
+        self.pinning = pinning
+        self.pinning_applied = None   # hwperf.AppliedPinning once pool pins
+        self._contention_model = None
         self.calibration = CalibrationStore(calibration_path)
+        if self.calibration.get_interference() is not None:
+            # measured contention on disk: make "cpf-contention" resolvable
+            self._install_contention()
         # default latency budget for lease admission: when the estimated
         # queue wait exceeds it, lease() sheds (AdmissionRejected with a
         # jittered retry_after) instead of queueing.  None = never shed.
@@ -594,7 +657,58 @@ class Runtime:
                     # per-executor busy state
                     self._admission.attach_probe(pool.current_tasks)
                     self._pool = pool
+                    if self.pinning != "off":
+                        self._apply_pinning(pool)
         return self._pool
+
+    def _apply_pinning(self, pool: ExecutorPool) -> None:
+        """Pin the pool's executor threads per :attr:`pinning` (lazy import:
+        sim-only runtimes never touch hwperf)."""
+        from repro.hwperf import pinning as hwpin
+
+        if self.pinning == "auto" and not hwpin.affinity_supported():
+            return   # auto = best-effort, silent where unsupported
+        plan = hwpin.plan_pinning(self.n_workers)
+        self.pinning_applied = hwpin.pin_pool(pool, plan)
+
+    def set_pinning(self, mode: str) -> None:
+        """Change the pinning mode; applies immediately when the pool is
+        already live (``api.compile(pinning=...)`` threads through here)."""
+        if mode not in self.PINNING_MODES:
+            raise ValueError(
+                f"pinning must be one of {self.PINNING_MODES}, got {mode!r}")
+        self.pinning = mode
+        if self._pool is not None and mode != "off":
+            self._apply_pinning(self._pool)
+
+    # -- measured contention -------------------------------------------------
+    def contention_model(self):
+        """The measured :class:`~repro.hwperf.model.ContentionModel` from
+        the calibration store's ``interference`` section, or ``None`` when
+        nothing has been measured.  Cached; invalidated by
+        :meth:`set_contention_model`."""
+        if self._contention_model is None:
+            section = self.calibration.get_interference()
+            if section is not None:
+                from repro.hwperf.model import ContentionModel
+
+                self._contention_model = ContentionModel.from_dict(section)
+        return self._contention_model
+
+    def set_contention_model(self, model) -> None:
+        """Adopt a freshly measured contention model: persist it to the
+        calibration store and (re)install the ``cpf-contention`` placement
+        policy over it."""
+        self.calibration.put_interference(model.to_dict())
+        self._contention_model = model
+        self._install_contention()
+
+    def _install_contention(self) -> None:
+        from repro.hwperf.model import install_contention_policy
+
+        model = self.contention_model()
+        if model is not None:
+            install_contention_policy(model)
 
     def lease(
         self,
@@ -735,10 +849,13 @@ class Runtime:
         self.close()
 
     def describe(self) -> str:
+        pin = self.pinning
+        if self.pinning_applied is not None:
+            pin += ":pinned" if self.pinning_applied.pinned else ":no-op"
         return (
             f"Runtime(n_workers={self.n_workers}, hw={self.hw.name}, "
             f"pool={'live' if self._pool is not None else 'lazy'}, "
-            f"leased={self.leased_executors}, "
+            f"leased={self.leased_executors}, pinning={pin}, "
             f"calibrations={len(self.calibration)})"
         )
 

@@ -102,21 +102,28 @@ def test_prefetcher_close_names_stuck_stage(caplog):
     import threading
 
     release = threading.Event()
+    wedged = threading.Event()
+    producer = threading.current_thread()   # replaced below
 
     class WedgedSource:
         def __init__(self):
             self.cfg = DataConfig(vocab_size=7, seq_len=4, global_batch=2)
-            self._n = 0
 
         def batch(self, step):
-            self._n += 1
-            if self._n > 1:            # first batch fills the queue fast
-                release.wait(30)       # then the generator wedges
+            # wedge only inside the producer thread: on a slow box get(0)
+            # may race the first enqueue and take the direct-call path —
+            # the *main* thread must never block here (it would stall 30s
+            # and let the producer exit before close() looks at it)
+            if step > 0 and threading.current_thread() is producer:
+                wedged.set()
+                release.wait(30)
             return SyntheticTokens(self.cfg).batch(step)
 
     pf = Prefetcher(WedgedSource(), start_step=0, depth=1)
+    producer = pf._thread
     try:
         pf.get(0)
+        assert wedged.wait(10), "producer never reached the wedge"
         with caplog.at_level(logging.WARNING, logger="repro.data.pipeline"):
             pf.close(timeout=0.3)
         stuck = [r for r in caplog.records if "stuck in" in r.message]

@@ -1,0 +1,458 @@
+"""repro.hwperf beyond topology: pinning (and its graceful no-op on
+platforms without affinity — ISSUE 10 acceptance criterion), the co-location
+harness, the contention model, its CalibrationStore/Runtime integration, and
+the ``cpf-contention`` placement policy."""
+import os
+import warnings
+
+import pytest
+
+from repro.core import KNL7250, Graph, SimConfig, simulate
+from repro.core.engine import ExecutorPool
+from repro.core.policies import get_policy, list_policies, unregister_policy
+from repro.hwperf import (
+    NO_AFFINITY_ENV,
+    ContentionModel,
+    InterferenceMatrix,
+    Workload,
+    affinity_supported,
+    classify,
+    default_workloads,
+    install_contention_policy,
+    measure_interference,
+    pin_current_thread,
+    pin_pool,
+    plan_pinning,
+    synthetic_topology,
+)
+from repro.hwperf import pinning as hwpin
+from repro.hwperf.model import ContentionAwareCPF
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warning_state():
+    """Each test sees the one-shot pinning warning as if freshly imported."""
+    hwpin._reset_warning_for_tests()
+    yield
+    hwpin._reset_warning_for_tests()
+
+
+@pytest.fixture
+def no_affinity(monkeypatch):
+    """Simulate a platform without sched_setaffinity (the CI smoke leg)."""
+    monkeypatch.setenv(NO_AFFINITY_ENV, "1")
+
+
+def _cleanup_policy(name="cpf-contention"):
+    if name in list_policies():
+        unregister_policy(name)
+
+
+# ---------------------------------------------------------------------------
+# pinning plans
+# ---------------------------------------------------------------------------
+
+def test_plan_pinning_disjoint_on_big_topology():
+    plan = plan_pinning(4, synthetic_topology(8))
+    assert plan.n_executors == 4
+    assert plan.disjoint
+    assert all(len(c) == 2 for c in plan.assignments)
+    assert "disjoint=True" in plan.describe()
+
+
+def test_plan_pinning_oversubscribed_overlaps():
+    plan = plan_pinning(4, synthetic_topology(2))
+    assert plan.n_executors == 4
+    assert not plan.disjoint
+    assert plan.cpus_for(0) == plan.cpus_for(2)   # round-robin wrap
+    assert plan.cpus_for(5) == plan.cpus_for(1)   # cpus_for itself wraps
+
+
+def test_affinity_disabled_by_env(no_affinity):
+    assert not affinity_supported()
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: unpinned no-op with a single warning (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_pin_pool_without_affinity_is_noop_with_single_warning(no_affinity):
+    plan = plan_pinning(2, synthetic_topology(2))
+    pool = ExecutorPool(2)
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            first = pin_pool(pool, plan)
+            second = pin_pool(pool, plan)     # re-pin (serve re-lease path)
+            assert not pin_current_thread((0,))
+        assert not first.pinned and not second.pinned
+        runtime_warnings = [x for x in w
+                            if issubclass(x.category, RuntimeWarning)]
+        assert len(runtime_warnings) == 1, \
+            f"expected exactly one warning, got {len(runtime_warnings)}"
+        assert "unpinned" in str(runtime_warnings[0].message) or \
+            "OS-scheduled" in str(runtime_warnings[0].message)
+    finally:
+        pool.close()
+
+
+@pytest.mark.skipif(not affinity_supported(),
+                    reason="no sched_setaffinity on this platform")
+def test_pin_pool_real_threads():
+    pool = ExecutorPool(2)
+    try:
+        plan = plan_pinning(2)                 # detected (restricted) topo
+        applied = pin_pool(pool, plan)
+        assert applied.pinned
+        assert applied.n_threads == 2
+        tids = pool.executor_thread_ids()
+        for ex, tid in enumerate(tids):
+            assert os.sched_getaffinity(tid) == set(plan.cpus_for(ex))
+        assert "pinned" in applied.describe()
+    finally:
+        pool.close()
+
+
+@pytest.mark.skipif(not affinity_supported(),
+                    reason="no sched_setaffinity on this platform")
+def test_pin_pool_rolls_back_on_os_rejection(monkeypatch):
+    """A mid-plan OS rejection (restricted cpuset) unpins the whole pool —
+    half-pinned would crowd every accepted executor onto a core fraction."""
+    pool = ExecutorPool(2)
+    restored: list[tuple[int, tuple]] = []
+    calls = {"n": 0}
+    real = hwpin._set_affinity
+
+    def flaky(tid, cpus):
+        calls["n"] += 1
+        if calls["n"] == 2:                     # second executor rejected
+            raise OSError("simulated cpuset rejection")
+        restored.append((tid, cpus))
+        real(tid, cpus)
+
+    monkeypatch.setattr(hwpin, "_set_affinity", flaky)
+    try:
+        plan = plan_pinning(2)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            applied = pin_pool(pool, plan)
+        assert not applied.pinned
+        assert applied.errors
+        assert any("OS-scheduled" in str(x.message) for x in w)
+        # the first pin was rolled back to the full mask (3rd call)
+        assert calls["n"] == 3
+        assert restored[-1][1] == tuple(
+            sorted(c.cpu for c in plan.topology.cpus))
+    finally:
+        pool.close()
+
+
+# ---------------------------------------------------------------------------
+# co-location harness
+# ---------------------------------------------------------------------------
+
+def _tiny_workloads():
+    return default_workloads(scale=32)
+
+
+def test_measure_interference_smoke():
+    m = measure_interference(_tiny_workloads(), synthetic_topology(2),
+                             iters=2, repeats=1)
+    assert set(m.classes()) == {"gemm", "elementwise", "memory"}
+    assert all(v > 0 for v in m.solo.values())
+    assert len(m.pair) == 9
+    for a in m.classes():
+        for b in m.classes():
+            assert m.slowdown(a, b) >= 1.0     # clamped at solo
+
+
+def test_measure_interference_unpinned_mode_recorded():
+    m = measure_interference(_tiny_workloads(), synthetic_topology(2),
+                             iters=1, repeats=1, pinned=False)
+    assert not m.pinned
+
+
+def test_slowdown_clamps_and_defaults():
+    m = InterferenceMatrix(solo={"gemm": 1.0},
+                           pair={("gemm", "gemm"): 0.5})
+    assert m.slowdown("gemm", "gemm") == 1.0   # noise can't be a speedup
+    assert m.slowdown("gemm", "memory") == 1.0  # unmeasured pair
+    assert m.slowdown("nope", "gemm") == 1.0    # unknown class
+
+
+def test_custom_workload_classes_flow_through():
+    wl = Workload("custom", lambda: 7, lambda s: s * 2)
+    m = measure_interference([wl], synthetic_topology(1), iters=1, repeats=1)
+    assert m.classes() == ["custom"]
+    assert ("custom", "custom") in m.pair
+
+
+# ---------------------------------------------------------------------------
+# contention model
+# ---------------------------------------------------------------------------
+
+def _hot_model():
+    return ContentionModel(
+        solo={"gemm": 1e-3, "elementwise": 1e-4, "memory": 5e-4},
+        pair_slowdown={("gemm", "gemm"): 1.8, ("gemm", "memory"): 1.1,
+                       ("memory", "gemm"): 1.4,
+                       ("elementwise", "elementwise"): 1.05},
+        pinned=True)
+
+
+def test_classify_kinds():
+    g = Graph("k")
+    assert classify(g.add_op("a", kind="gemm")) == "gemm"
+    assert classify(g.add_op("b", kind="attention")) == "gemm"
+    assert classify(g.add_op("c", kind="elementwise")) == "elementwise"
+    assert classify(g.add_op("d", kind="input")) == "memory"
+    assert classify(g.add_op("e", kind="exotic-new-kind")) == "elementwise"
+    assert classify(object()) == "elementwise"  # no .kind at all
+
+
+def test_model_from_matrix_and_dict_round_trip():
+    m = InterferenceMatrix(
+        solo={"gemm": 2.0, "memory": 1.0},
+        pair={("gemm", "gemm"): 3.0, ("gemm", "memory"): 2.2,
+              ("memory", "gemm"): 1.9, ("memory", "memory"): 1.1},
+        pinned=True)
+    model = ContentionModel.from_matrix(m, hot_threshold=1.3)
+    assert model.pair_slowdown[("gemm", "gemm")] == pytest.approx(1.5)
+    assert model.pinned
+    clone = ContentionModel.from_dict(model.to_dict())
+    assert clone.solo == model.solo
+    assert clone.pair_slowdown == model.pair_slowdown
+    assert clone.hot_threshold == model.hot_threshold
+    assert clone.pinned == model.pinned
+
+
+def test_multiplier_is_worst_pairwise_not_product():
+    model = _hot_model()
+    # beside both a gemm and a memory op: max(1.8, 1.1), never 1.8 * 1.1
+    assert model.multiplier("gemm", ["gemm", "memory"]) == pytest.approx(1.8)
+    assert model.multiplier("gemm", []) == 1.0
+    assert model.multiplier("unknown", ["gemm"]) == 1.0
+
+
+def test_pair_cost_takes_worse_direction():
+    model = _hot_model()
+    assert model.pair_cost("gemm", "memory") == pytest.approx(1.4)
+    assert model.pair_cost("memory", "gemm") == pytest.approx(1.4)
+
+
+def test_hot_classes_threshold():
+    model = _hot_model()
+    assert model.hot_classes() == {"gemm", "memory"}
+    cool = ContentionModel(pair_slowdown={("a", "b"): 1.1})
+    assert cool.hot_classes() == set()
+
+
+# ---------------------------------------------------------------------------
+# simulator integration: SimConfig.contention
+# ---------------------------------------------------------------------------
+
+def _parallel_gemms(n=4):
+    g = Graph("par")
+    for i in range(n):
+        g.add_op(f"g{i}", kind="gemm", flops=1e9, bytes_in=1e6, bytes_out=1e6)
+    return g
+
+
+def test_simulate_contention_inflates_coresident_ops():
+    g = _parallel_gemms(4)
+    model = ContentionModel(pair_slowdown={("gemm", "gemm"): 2.0})
+    base = simulate(g, KNL7250, SimConfig(n_executors=4, team_size=4))
+    slow = simulate(g, KNL7250, SimConfig(n_executors=4, team_size=4,
+                                          contention=model))
+    assert slow.makespan > base.makespan * 1.5   # co-residents pay ~2x
+
+
+def test_simulate_contention_no_overlap_no_inflation():
+    g = _parallel_gemms(2)
+    model = ContentionModel(pair_slowdown={("gemm", "gemm"): 2.0})
+    base = simulate(g, KNL7250, SimConfig(n_executors=1, team_size=4))
+    seq = simulate(g, KNL7250, SimConfig(n_executors=1, team_size=4,
+                                         contention=model))
+    # one executor: ops never co-resident, the model must not fire
+    assert seq.makespan == pytest.approx(base.makespan)
+
+
+# ---------------------------------------------------------------------------
+# cpf-contention placement policy
+# ---------------------------------------------------------------------------
+
+def _mixed_graph():
+    g = Graph("mixed")
+    for i in range(2):
+        g.add_op(f"g{i}", kind="gemm", flops=1e9)
+        g.add_op(f"e{i}", kind="elementwise", flops=1e9)
+    return g
+
+
+def test_contention_policy_registers_and_replaces():
+    try:
+        p1 = install_contention_policy(_hot_model())
+        assert get_policy("cpf-contention") is p1
+        p2 = install_contention_policy(_hot_model())   # re-measured model
+        assert get_policy("cpf-contention") is p2
+    finally:
+        _cleanup_policy()
+
+
+def test_contention_policy_degenerates_to_cpf_without_hot_pairs():
+    """With a contention-free model the placement hook is CPF exactly —
+    same trace, op for op (the bench's never-worsens gate, exact form)."""
+    unit = ContentionModel()                    # no measured pairs at all
+    policy = ContentionAwareCPF(unit)
+    g = _mixed_graph()
+    cfg = dict(n_executors=2, team_size=4)
+    a = simulate(g, KNL7250, SimConfig(policy="cpf", **cfg))
+    b = simulate(g, KNL7250, SimConfig(policy=policy, **cfg))
+    assert b.makespan == pytest.approx(a.makespan)
+    assert [(e.op, e.executor) for e in b.trace] == \
+        [(e.op, e.executor) for e in a.trace]
+
+
+def test_contention_policy_never_worsens_simulated_makespan():
+    model = _hot_model()
+    policy = ContentionAwareCPF(model)
+    g = _mixed_graph()
+    for n in (2, 4):
+        cfg = dict(n_executors=n, team_size=2, contention=model)
+        base = simulate(g, KNL7250, SimConfig(policy="cpf", **cfg))
+        aware = simulate(g, KNL7250, SimConfig(policy=policy, **cfg))
+        assert aware.makespan <= base.makespan * (1 + 1e-9)
+
+
+def test_assign_executor_steers_hot_class_away():
+    model = _hot_model()                        # gemm|gemm is hot (1.8)
+    policy = ContentionAwareCPF(model)
+    g = _mixed_graph()
+    from repro.core.policies import PolicyContext
+
+    ctx = PolicyContext(graph=g, costs={}, levels={}, depths={},
+                        n_executors=2)
+    # executor 0 last ran a gemm; a new gemm must pick executor 1
+    ctx.scratch["contention.exec_class"] = {0: "gemm"}
+    assert policy.assign_executor(ctx, "g1", (0, 1)) == 1
+    # ties (both neutral) break to the lowest executor id
+    ctx.scratch["contention.exec_class"] = {}
+    ctx.scratch.pop("contention.hot", None)
+    assert policy.assign_executor(ctx, "g0", (0, 1)) == 0
+    assert policy.assign_executor(ctx, "e0", (1, 0)) == 1  # cool class: FIFO
+    assert policy.assign_executor(ctx, "g0", ()) is None
+
+
+# ---------------------------------------------------------------------------
+# Runtime integration
+# ---------------------------------------------------------------------------
+
+def test_runtime_rejects_bad_pinning_mode():
+    from repro.runtime import Runtime
+
+    with pytest.raises(ValueError, match="pinning"):
+        Runtime(2, pinning="sideways")
+    rt = Runtime(2)
+    try:
+        with pytest.raises(ValueError, match="pinning"):
+            rt.set_pinning("sideways")
+    finally:
+        rt.close()
+
+
+def test_runtime_pinning_auto_is_silent_without_affinity(no_affinity):
+    from repro.runtime import Runtime
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with Runtime(2, pinning="auto") as rt:
+            rt.pool                              # force lazy pool creation
+            assert rt.pinning_applied is None    # auto: silent no-op
+    assert not [x for x in w if issubclass(x.category, RuntimeWarning)]
+
+
+def test_runtime_pinning_on_without_affinity_warns_once_and_executes(
+        no_affinity):
+    """Acceptance criterion: pinning='on' on a platform without
+    sched_setaffinity runs the whole stack unpinned with ONE warning."""
+    import jax.numpy as jnp
+
+    from repro import api
+    from repro.runtime import Runtime
+
+    def fn(x):
+        return jnp.tanh(x @ x).sum()
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with Runtime(2, pinning="on") as rt:
+            exe = api.compile(fn, jnp.ones((8, 8), jnp.float32),
+                              backend="host", runtime=rt)
+            out = exe(jnp.ones((8, 8), jnp.float32))
+            assert float(out) == pytest.approx(
+                float(fn(jnp.ones((8, 8), jnp.float32))))
+            assert rt.pinning_applied is not None
+            assert not rt.pinning_applied.pinned
+            assert "pinning=on:no-op" in rt.describe()
+    runtime_warnings = [x for x in w if issubclass(x.category, RuntimeWarning)]
+    assert len(runtime_warnings) == 1
+
+
+@pytest.mark.skipif(not affinity_supported(),
+                    reason="no sched_setaffinity on this platform")
+def test_runtime_pinning_on_pins_pool_threads():
+    from repro.runtime import Runtime
+
+    with Runtime(2, pinning="on") as rt:
+        rt.pool
+        assert rt.pinning_applied is not None
+        assert rt.pinning_applied.pinned
+        assert "pinning=on:pinned" in rt.describe()
+
+
+def test_compile_pinning_kwarg_threads_to_runtime():
+    from repro import api
+    from repro.runtime import Runtime
+
+    with Runtime(2) as rt:
+        assert rt.pinning == "off"
+        g = Graph("p")
+        g.add_op("a", flops=1e6)
+        api.compile(g, backend="sim", runtime=rt, pinning="auto")
+        assert rt.pinning == "auto"
+
+
+def test_runtime_installs_contention_policy_from_store(tmp_path):
+    from repro.runtime import CalibrationStore, Runtime
+
+    path = str(tmp_path / "cal.json")
+    CalibrationStore(path).put_interference(_hot_model().to_dict())
+    _cleanup_policy()
+    try:
+        rt = Runtime(2, calibration_path=path)
+        try:
+            assert "cpf-contention" in list_policies()
+            model = rt.contention_model()
+            assert model is not None
+            assert model.pair_slowdown[("gemm", "gemm")] == pytest.approx(1.8)
+            assert rt.contention_model() is model     # cached
+        finally:
+            rt.close()
+    finally:
+        _cleanup_policy()
+
+
+def test_runtime_set_contention_model_persists_and_installs(tmp_path):
+    from repro.runtime import CalibrationStore, Runtime
+
+    path = str(tmp_path / "cal.json")
+    _cleanup_policy()
+    try:
+        with Runtime(2, calibration_path=path) as rt:
+            assert rt.contention_model() is None
+            rt.set_contention_model(_hot_model())
+            assert "cpf-contention" in list_policies()
+        stored = CalibrationStore(path).get_interference()
+        assert stored == _hot_model().to_dict()
+    finally:
+        _cleanup_policy()

@@ -1,0 +1,166 @@
+"""repro.hwperf.topology: synthetic shapes, sysfs parsing, fallbacks, and
+the disjoint core-set planner (PR 10 tentpole)."""
+import os
+
+import pytest
+
+from repro.hwperf.topology import (CpuTopology, LogicalCpu, detect_topology,
+                                   disjoint_core_sets, synthetic_topology)
+
+
+# ---------------------------------------------------------------------------
+# synthetic shapes
+# ---------------------------------------------------------------------------
+
+def test_synthetic_flat():
+    t = synthetic_topology(4)
+    assert t.n_cpus == 4
+    assert t.sockets == (0,)
+    assert not t.smt
+    assert t.physical_cores() == [(0,), (1,), (2,), (3,)]
+
+
+def test_synthetic_smt_pairs_linux_enumeration():
+    # 8 cpus, smt=2: cores 0-3 carry cpus (0,4), (1,5), (2,6), (3,7) — the
+    # Linux convention (first one cpu per core, then the siblings)
+    t = synthetic_topology(8, smt=2)
+    assert t.smt
+    assert t.physical_cores() == [(0, 4), (1, 5), (2, 6), (3, 7)]
+    assert t.smt_siblings(1) == (1, 5)
+    assert t.smt_siblings(5) == (1, 5)
+
+
+def test_synthetic_two_sockets():
+    t = synthetic_topology(8, sockets=2)
+    assert t.sockets == (0, 1)
+    assert t.cpus_of_socket(0) == (0, 1, 2, 3)
+    assert t.cpus_of_socket(1) == (4, 5, 6, 7)
+    assert t.nodes == (0, 1)
+
+
+def test_synthetic_rejects_bad_args():
+    with pytest.raises(ValueError):
+        synthetic_topology(0)
+    with pytest.raises(ValueError):
+        synthetic_topology(4, sockets=0)
+    with pytest.raises(ValueError):
+        synthetic_topology(4, smt=0)
+
+
+def test_smt_siblings_unknown_cpu_raises():
+    t = synthetic_topology(2)
+    with pytest.raises(ValueError, match="cpu 9"):
+        t.smt_siblings(9)
+
+
+def test_describe_mentions_shape():
+    d = synthetic_topology(8, sockets=2, smt=2).describe()
+    assert "8 cpus" in d and "4 cores" in d and "2 socket(s)" in d
+    assert "smt=on" in d
+
+
+# ---------------------------------------------------------------------------
+# detection: fake sysfs tree, fallback, real machine
+# ---------------------------------------------------------------------------
+
+def _fake_sysfs(root, layout):
+    """layout: {cpu: (core, socket, node|None)}"""
+    for cpu, (core, socket, node) in layout.items():
+        d = os.path.join(root, "devices", "system", "cpu", f"cpu{cpu}",
+                         "topology")
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, "core_id"), "w") as f:
+            f.write(f"{core}\n")
+        with open(os.path.join(d, "physical_package_id"), "w") as f:
+            f.write(f"{socket}\n")
+        if node is not None:
+            os.makedirs(os.path.join(d, os.pardir, f"node{node}"),
+                        exist_ok=True)
+
+
+def test_detect_parses_fake_sysfs(tmp_path, monkeypatch):
+    # pretend the process may run on cpus 0 and 1 of a 2-smt single core
+    monkeypatch.setattr("repro.hwperf.topology._usable_cpus", lambda: [0, 1])
+    _fake_sysfs(str(tmp_path), {0: (0, 0, 0), 1: (0, 0, 0)})
+    t = detect_topology(sysfs=str(tmp_path))
+    assert t.source == "sys"
+    assert t.n_cpus == 2
+    assert t.physical_cores() == [(0, 1)]   # SMT siblings grouped
+    assert t.smt
+
+
+def test_detect_partial_sysfs_falls_back_flat(tmp_path, monkeypatch):
+    # cpu1's files are missing: the whole detection degrades to flat —
+    # never fabricate an asymmetric machine from a partial read
+    monkeypatch.setattr("repro.hwperf.topology._usable_cpus", lambda: [0, 1])
+    _fake_sysfs(str(tmp_path), {0: (0, 0, None)})
+    t = detect_topology(sysfs=str(tmp_path))
+    assert t.source == "flat"
+    assert t.n_cpus == 2
+    assert not t.smt
+
+
+def test_detect_real_machine_restricted_to_affinity():
+    t = detect_topology()
+    assert t.n_cpus >= 1
+    assert t.source in ("sys", "flat")
+    if hasattr(os, "sched_getaffinity"):
+        assert t.n_cpus == len(os.sched_getaffinity(0))
+
+
+# ---------------------------------------------------------------------------
+# disjoint core sets
+# ---------------------------------------------------------------------------
+
+def test_disjoint_sets_partition_whole_cores():
+    t = synthetic_topology(8, smt=2)          # cores (0,4) (1,5) (2,6) (3,7)
+    sets = disjoint_core_sets(t, 2)
+    assert len(sets) == 2
+    seen = [c for s in sets for c in s]
+    assert len(seen) == len(set(seen))        # disjoint
+    # SMT siblings never split across sets
+    for s in sets:
+        for cpu in s:
+            assert all(sib in s for sib in t.smt_siblings(cpu))
+
+
+def test_disjoint_sets_stay_on_one_socket_when_possible():
+    t = synthetic_topology(8, sockets=2)
+    sets = disjoint_core_sets(t, 2)
+    for s in sets:
+        sockets = {next(c.socket for c in t.cpus if c.cpu == cpu)
+                   for cpu in s}
+        assert len(sockets) == 1
+
+
+def test_oversubscribed_round_robins_single_cpus():
+    t = synthetic_topology(2)
+    sets = disjoint_core_sets(t, 5)
+    assert len(sets) == 5
+    assert all(len(s) == 1 for s in sets)
+    assert sets[0] != sets[1]                  # round-robin, not all-on-one
+    assert sets[0] == sets[2]                  # wraps
+
+
+def test_cpus_per_set_clamped_to_even_split():
+    t = synthetic_topology(8)
+    sets = disjoint_core_sets(t, 4, cpus_per_set=100)
+    assert all(len(s) == 2 for s in sets)
+
+
+def test_n_sets_must_be_positive():
+    with pytest.raises(ValueError):
+        disjoint_core_sets(synthetic_topology(2), 0)
+
+
+def test_logical_cpu_is_frozen():
+    c = LogicalCpu(cpu=0, core=0, socket=0, node=0)
+    with pytest.raises(AttributeError):
+        c.cpu = 1
+
+
+def test_topology_is_value_like():
+    a = synthetic_topology(4)
+    b = synthetic_topology(4)
+    assert a == b
+    assert isinstance(a, CpuTopology)

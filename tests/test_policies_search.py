@@ -4,7 +4,7 @@ Covers: the SchedulePolicy registry (registration rules, resolution,
 executor-assignment hook), deterministic tie-breaking in the simulator
 (equal-priority ops pop in stable node-id order — satellite 1 regression),
 core.search (winner <= CPF, CPF-preferring ties, S-rule verification),
-CalibrationStore format-2 schedule sections + format-1 migration, and the
+CalibrationStore schedule sections + format-1 migration, and the
 api schedule_search knob (auto/force semantics, store-hit replay without
 re-searching — the PR 5 monkeypatch pattern).
 """
@@ -295,14 +295,14 @@ def test_store_loads_checked_in_format1_fixture(tmp_path):
     sig = "1111aaaa2222bbbb3333cccc4444dddd5555eeee6666ffff7777000088889999"
     assert store.get(sig) == {"l0w0": 0.00013, "l0w1": 0.00027, "out": 4.2e-05}
     assert len(store) == 2
-    # round trip: rewrite as format 2, costs intact, schedules now storable
+    # round trip: rewrite as format 3, costs intact, schedules now storable
     out = str(tmp_path / "migrated.json")
     store.put_schedule(sig, "4x8|analytic",
                        {"policy": "lpt", "seed": 0, "makespan_sim": 1e-3,
                         "runner_up_gap": 0.02})
     store.save(out)
     payload = json.loads(open(out).read())
-    assert payload["format"] == 2
+    assert payload["format"] == 3
     fresh = CalibrationStore(out)
     assert fresh.get(sig) == store.get(sig)
     assert fresh.get_schedule(sig, "4x8|analytic")["policy"] == "lpt"
@@ -327,9 +327,50 @@ def test_store_schedule_sections_round_trip(tmp_path):
     assert fresh.get("sig-x") == {"op": 1e-3}
 
 
+def test_store_loads_checked_in_format2_fixture(tmp_path):
+    """Format-2 files (pre-hwperf: no interference section) migrate
+    losslessly — costs and searched schedules preserved, interference
+    section empty — and rewrite as format 3 (ISSUE 10 satellite)."""
+    fixture = os.path.join(FIXTURE_DIR, "calibration_format2.json")
+    store = CalibrationStore()    # no path: the checked-in fixture stays 2
+    store.load(fixture)
+    sig = "1111aaaa2222bbbb3333cccc4444dddd5555eeee6666ffff7777000088889999"
+    sig2 = "abcdef0123456789abcdef0123456789abcdef0123456789abcdef0123456789"
+    assert store.get(sig) == {"l0w0": 0.00013, "l0w1": 0.00027, "out": 4.2e-05}
+    assert store.get(sig2) == {"gemm0": 0.0031, "gemm1": 0.0029}
+    assert store.get_schedule(sig, "4x8|analytic")["policy"] == "lpt"
+    # the section format 2 never had starts empty, not fabricated
+    assert store.get_interference() is None
+    out = str(tmp_path / "migrated.json")
+    store.save(out)
+    payload = json.loads(open(out).read())
+    assert payload["format"] == 3
+    assert payload["interference"] == {}
+    fresh = CalibrationStore(out)
+    assert fresh.get(sig) == store.get(sig)
+    assert fresh.get(sig2) == store.get(sig2)
+    assert fresh.get_schedule(sig, "4x8|analytic") == \
+        store.get_schedule(sig, "4x8|analytic")
+    assert fresh.get_interference() is None
+
+
+def test_store_interference_section_round_trip(tmp_path):
+    path = str(tmp_path / "cal.json")
+    store = CalibrationStore(path)
+    section = {"solo": {"gemm": 1e-3}, "pairs": {"gemm|gemm": 1.4},
+               "hot_threshold": 1.25, "pinned": True}
+    store.put_interference(section)
+    fresh = CalibrationStore(path)
+    assert fresh.get_interference() == section
+    # replacement is wholesale: two measurement runs must not interleave
+    store.put_interference({"solo": {}, "pairs": {}, "hot_threshold": 1.1,
+                            "pinned": False})
+    assert CalibrationStore(path).get_interference()["pinned"] is False
+
+
 def test_store_unknown_future_format_names_the_file(tmp_path):
     p = tmp_path / "future.json"
-    p.write_text(json.dumps({"format": 3, "entries": {}}))
+    p.write_text(json.dumps({"format": 99, "entries": {}}))
     with pytest.raises(ValueError, match="future.json"):
         CalibrationStore(str(p))
 

@@ -1,0 +1,104 @@
+"""core.trace timeline rendering and its Executable surface
+(``describe(trace=)`` / ``render_trace`` — ISSUE 10 satellite: both exports
+previously had zero callers and zero tests)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api as graphi
+from repro.core import KNL7250, Graph
+from repro.core.simulate import TraceEvent
+from repro.core.trace import ascii_timeline, trace_csv
+
+
+def _trace():
+    return [
+        TraceEvent(op="a", executor=0, start=0.0, end=10e-6),
+        TraceEvent(op="b", executor=1, start=2e-6, end=8e-6),
+        TraceEvent(op="c", executor=0, start=10e-6, end=20e-6),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# renderers
+# ---------------------------------------------------------------------------
+
+def test_ascii_timeline_one_row_per_executor():
+    out = ascii_timeline(_trace(), 2)
+    lines = out.splitlines()
+    assert lines[0].startswith("E00 |")
+    assert lines[1].startswith("E01 |")
+    assert len(lines) == 3                       # 2 executors + time axis
+    assert "20.0us" in lines[-1]
+    # ops render as their trailing name character on their own row
+    assert "a" in lines[0] and "c" in lines[0]
+    assert "b" in lines[1]
+    assert "b" not in lines[0]
+
+
+def test_ascii_timeline_overlap_marks_hash():
+    # two ops on one executor overlapping in time render as '#'
+    t = [TraceEvent("x", 0, 0.0, 1.0), TraceEvent("y", 0, 0.0, 1.0)]
+    out = ascii_timeline(t, 1)
+    assert "#" in out
+
+
+def test_ascii_timeline_empty():
+    assert ascii_timeline([], 4) == "(empty trace)"
+
+
+def test_trace_csv_sorted_with_durations():
+    out = trace_csv(_trace())
+    lines = out.splitlines()
+    assert lines[0] == "op,executor,start_us,end_us,duration_us"
+    assert lines[1].startswith("a,0,0.000,10.000,10.000")
+    assert lines[2].startswith("b,1,2.000,8.000,6.000")   # sorted by start
+    assert len(lines) == 4
+
+
+# ---------------------------------------------------------------------------
+# Executable surface
+# ---------------------------------------------------------------------------
+
+def _diamond():
+    g = Graph("tr")
+    g.add_op("a", flops=1e8)
+    g.add_op("b", flops=2e8, deps=("a",))
+    g.add_op("c", flops=3e8, deps=("a",))
+    g.add_op("d", flops=1e8, deps=("b", "c"))
+    return g
+
+
+def test_describe_trace_appends_simulated_timeline():
+    exe = graphi.compile(_diamond(), hw=KNL7250, backend="sim")
+    plain = exe.describe()
+    assert "trace (" not in plain
+    with_trace = exe.describe(trace=True)
+    assert with_trace.startswith(plain)
+    assert "trace (simulated" in with_trace
+    assert "E00 |" in with_trace
+
+
+def test_describe_trace_csv():
+    exe = graphi.compile(_diamond(), hw=KNL7250, backend="sim")
+    out = exe.describe(trace="csv")
+    assert "op,executor,start_us,end_us,duration_us" in out
+
+
+def test_render_trace_measured_after_host_run():
+    def fn(x):
+        y = jnp.tanh(x @ x)
+        return (y @ x).sum()
+
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(16, 16)),
+                    jnp.float32)
+    exe = graphi.compile(fn, x, hw=KNL7250, backend="host")
+    exe.execute_host(exe.captured.bind((x,)), collect_trace=True)
+    out = exe.render_trace()
+    assert "measured" in out.splitlines()[0]
+
+
+def test_render_trace_rejects_unknown_format():
+    exe = graphi.compile(_diamond(), hw=KNL7250, backend="sim")
+    with pytest.raises(ValueError, match="fmt"):
+        exe.render_trace(fmt="svg")
